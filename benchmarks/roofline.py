@@ -1,0 +1,51 @@
+"""Roofline report: aggregates experiments/dryrun/*.json into the
+EXPERIMENTS.md tables (§Dry-run, §Roofline)."""
+from __future__ import annotations
+
+import glob
+import json
+import os
+
+from benchmarks.common import emit
+
+
+def load_cells(directory: str = "experiments/dryrun"):
+    cells = []
+    for path in sorted(glob.glob(os.path.join(directory, "*.json"))):
+        with open(path) as f:
+            cells.append(json.load(f))
+    return cells
+
+
+def fmt_row(c):
+    r = c["roofline"]
+    mem = c["memory"]["bytes_per_device"] / 2**30
+    tot = max(r["compute_s"], r["memory_s"], r["collective_s"])
+    frac = r["compute_s"] / tot if tot else 0.0
+    return (f"| {c['arch']} | {c['shape']} | {c['mesh']} | "
+            f"{r['compute_s'] * 1e3:.2f} | {r['memory_s'] * 1e3:.2f} | "
+            f"{r['collective_s'] * 1e3:.2f} | {r['dominant'].replace('_s', '')} | "
+            f"{c['useful_flops_frac']:.2f} | {mem:.1f} | {frac:.2f} |")
+
+
+def main():
+    cells = load_cells()
+    singles = [c for c in cells if "skipped" not in c
+               and c["mesh"].startswith("single") and "__" not in
+               c.get("tag", "")]
+    print("| arch | shape | mesh | compute ms | memory ms | collective ms"
+          " | bottleneck | useful | GiB/dev | roofline frac |")
+    print("|---|---|---|---|---|---|---|---|---|---|")
+    for c in singles:
+        print(fmt_row(c))
+    for c in cells:
+        if "skipped" in c:
+            continue
+        r = c["roofline"]
+        emit(f"roofline_{c['arch']}_{c['shape']}_{c['mesh'][:5]}",
+             max(r["compute_s"], r["memory_s"], r["collective_s"]) * 1e6,
+             f"dominant={r['dominant']} useful={c['useful_flops_frac']:.2f}")
+
+
+if __name__ == "__main__":
+    main()

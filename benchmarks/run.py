@@ -1,0 +1,61 @@
+"""Benchmark harness entry point: one function per paper table/figure.
+Prints ``name,us_per_call,derived`` CSV rows.
+
+  Fig. 10 (speedup/energy)      -> bench_speedup
+  Fig. 11 + Fig. 4 (parallelism)-> bench_parallelism
+  Fig. 12 + Sec 5.2.5 (scaling) -> bench_scaling
+  Fig. 13 + Table 7 (compiler)  -> bench_compile_time
+  Table 8 (mapping quality)     -> bench_mapping_quality
+  kernels                       -> bench_kernels
+  §Roofline (from dry-run JSON) -> roofline
+
+Fast mode (default) uses reduced graph counts; FULL=1 uses paper-scale
+counts (100 graphs/group).
+"""
+from __future__ import annotations
+
+import os
+import sys
+import traceback
+
+
+def main() -> None:
+    from benchmarks import (bench_speedup, bench_parallelism,
+                            bench_scaling, bench_compile_time,
+                            bench_mapping_quality, bench_kernels)
+    fast = bool(os.environ.get("BENCH_FAST"))
+    calls = [
+        (bench_speedup, dict(graphs_per_group=1, sources_per_graph=1,
+                             effort=0, skip=(("Syn", "wcc"),))
+            if fast else {}),
+        (bench_parallelism, dict(graphs_per_group=1, sources=2, effort=0,
+                                 skip=(("Syn", "wcc"), ("Syn", "sssp")))
+            if fast else {}),
+        (bench_scaling, {}),
+        (bench_compile_time, {}),
+        (bench_mapping_quality, dict(graphs_per_group=1, sources=1)
+            if fast else {}),
+        (bench_kernels, {}),
+    ]
+    for m, kw in calls:
+        try:
+            if kw and hasattr(m, "run"):
+                m.run(**kw)
+                if m is bench_scaling or m is bench_compile_time:
+                    pass
+            else:
+                m.main()
+        except Exception:
+            print(f"[bench] {m.__name__} FAILED", file=sys.stderr)
+            traceback.print_exc()
+    # roofline table only if dry-run results exist
+    try:
+        from benchmarks import roofline
+        if roofline.load_cells():
+            roofline.main()
+    except Exception:
+        traceback.print_exc()
+
+
+if __name__ == "__main__":
+    main()

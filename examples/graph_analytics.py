@@ -1,0 +1,21 @@
+"""Graph analytics on the distributed JAX engine: all three paper
+workloads on every local device (shard_map over destination tiles).
+
+  PYTHONPATH=src python examples/graph_analytics.py
+"""
+import numpy as np
+
+from repro.core import compile_mapping
+from repro.core.engine import FlipEngine
+from repro.graphs import make_road_network, reference
+
+g = make_road_network(512, seed=1)
+mapping = compile_mapping(g, effort=0, seed=0)
+print(f"|V|={g.n} |E|={g.m} slices={mapping.num_copies()}")
+for algo in ("bfs", "sssp", "wcc"):
+    eng = FlipEngine.build(g, algo, mapping=mapping, tile=64)
+    got = eng.run_distributed(0)
+    ref, _ = reference.run(algo, g, 0)
+    ok = np.allclose(np.where(np.isinf(got), -1, got),
+                     np.where(np.isinf(ref), -1, ref))
+    print(f"{algo}: distributed fixpoint correct={ok}")

@@ -1,0 +1,13 @@
+"""Continuous-batching serving example (FLIP frontier semantics over
+requests: slots activate on admission, retire at EOS).
+
+  PYTHONPATH=src python examples/serve_lm.py
+"""
+import subprocess
+import sys
+
+subprocess.run(
+    [sys.executable, "-m", "repro.launch.serve",
+     "--arch", "qwen3_0_6b", "--preset", "tiny",
+     "--slots", "8", "--requests", "24", "--max-new", "24"],
+    check=True)

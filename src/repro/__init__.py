@@ -1,0 +1,14 @@
+"""repro: FLIP (data-centric edge CGRA) reproduced and scaled as a JAX framework.
+
+Layers:
+  repro.graphs   -- graph substrate (CSR, generators, references)
+  repro.core     -- the paper's contribution (mapping compiler, cycle sim,
+                    JAX frontier engine, data-centric dispatch)
+  repro.kernels  -- Pallas TPU kernels (frontier relax, attention, SSD)
+  repro.models   -- LM substrate for the assigned architectures
+  repro.configs  -- one config per assigned architecture
+  repro.distributed / repro.optim / repro.checkpoint / repro.data
+  repro.launch   -- mesh, dryrun, train, serve, graph_run
+"""
+
+__version__ = "1.0.0"

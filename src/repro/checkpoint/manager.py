@@ -1,0 +1,168 @@
+"""Sharded, async, atomic checkpointing (no external deps).
+
+Layout: <dir>/step_<N>/
+    manifest.json          -- tree structure, shapes, dtypes, step, extras
+    arr_<i>.npy            -- one file per leaf (host-gathered)
+    _COMMITTED             -- written last; a checkpoint without it is
+                              ignored on restore (atomic-commit marker)
+
+Async: `save(..., blocking=False)` snapshots leaves to host memory on the
+caller's thread (cheap; device->host copy) and writes files on a
+background thread, so the train loop overlaps I/O with compute --
+the standard large-cluster pattern. `wait()` joins the writer.
+
+Restore: `load_pytree` reads the newest committed step and (if a mesh is
+active) device_puts each leaf with its target sharding -- this is also the
+elastic-resize path: a checkpoint written on one mesh restores onto any
+other mesh because leaves are stored unsharded (host-complete).
+
+On multi-host clusters each leaf would be gathered via
+jax.experimental.multihost_utils; this container is single-process, so
+the gather is a plain device_get (documented limitation, same API).
+"""
+from __future__ import annotations
+
+import json
+import os
+import shutil
+import threading
+
+import jax
+import ml_dtypes
+import numpy as np
+
+# numpy .npy cannot serialize ml_dtypes (bfloat16 etc.); store them as raw
+# uint views and record the logical dtype in the manifest
+_VIEW_DTYPES = {"bfloat16": np.uint16, "float8_e4m3fn": np.uint8,
+                "float8_e5m2": np.uint8}
+
+
+def _to_storable(a: np.ndarray):
+    name = str(a.dtype)
+    if name in _VIEW_DTYPES:
+        return a.view(_VIEW_DTYPES[name]), name
+    return a, name
+
+
+def _from_storable(a: np.ndarray, dtype_name: str):
+    if dtype_name in _VIEW_DTYPES:
+        return a.view(getattr(ml_dtypes, dtype_name))
+    return a
+
+
+def _flatten_with_paths(tree):
+    flat, treedef = jax.tree_util.tree_flatten_with_path(tree)
+    paths = ["/".join(str(getattr(k, "key", getattr(k, "idx", k)))
+                      for k in path) for path, _ in flat]
+    leaves = [leaf for _, leaf in flat]
+    return paths, leaves, treedef
+
+
+def save_pytree(tree, directory: str, step: int, extras: dict | None = None):
+    """Synchronous sharded save with atomic commit."""
+    paths, leaves, _ = _flatten_with_paths(tree)
+    host = [np.asarray(jax.device_get(leaf)) for leaf in leaves]
+    final = os.path.join(directory, f"step_{step:08d}")
+    tmp = final + ".tmp"
+    if os.path.exists(tmp):
+        shutil.rmtree(tmp)
+    os.makedirs(tmp, exist_ok=True)
+    stored = [_to_storable(a) for a in host]
+    manifest = {"step": step, "paths": paths,
+                "dtypes": [name for _, name in stored],
+                "shapes": [list(a.shape) for a in host],
+                "extras": extras or {}}
+    for i, (a, _) in enumerate(stored):
+        np.save(os.path.join(tmp, f"arr_{i}.npy"), a)
+    with open(os.path.join(tmp, "manifest.json"), "w") as f:
+        json.dump(manifest, f)
+    with open(os.path.join(tmp, "_COMMITTED"), "w") as f:
+        f.write("ok")
+    if os.path.exists(final):
+        shutil.rmtree(final)
+    os.rename(tmp, final)
+    return final
+
+
+def committed_steps(directory: str) -> list[int]:
+    if not os.path.isdir(directory):
+        return []
+    out = []
+    for name in os.listdir(directory):
+        if name.startswith("step_") and not name.endswith(".tmp") and \
+                os.path.exists(os.path.join(directory, name, "_COMMITTED")):
+            out.append(int(name.split("_")[1]))
+    return sorted(out)
+
+
+def load_pytree(tree_like, directory: str, step: int | None = None,
+                shardings=None):
+    """Restore into the structure of `tree_like` (abstract or concrete).
+
+    `shardings`: optional matching pytree of NamedSharding -- leaves are
+    device_put with them (the elastic-resharding path)."""
+    steps = committed_steps(directory)
+    if not steps:
+        raise FileNotFoundError(f"no committed checkpoint in {directory}")
+    step = steps[-1] if step is None else step
+    d = os.path.join(directory, f"step_{step:08d}")
+    with open(os.path.join(d, "manifest.json")) as f:
+        manifest = json.load(f)
+    paths, _, treedef = _flatten_with_paths(tree_like)
+    assert paths == manifest["paths"], (
+        "checkpoint tree structure mismatch")
+    leaves = [_from_storable(np.load(os.path.join(d, f"arr_{i}.npy")),
+                             manifest["dtypes"][i])
+              for i in range(len(paths))]
+    if shardings is not None:
+        sh_leaves = jax.tree_util.tree_leaves(shardings)
+        leaves = [jax.device_put(a, s) for a, s in zip(leaves, sh_leaves)]
+    else:
+        leaves = [jax.device_put(a) for a in leaves]
+    tree = jax.tree_util.tree_unflatten(treedef, leaves)
+    return tree, manifest["step"], manifest.get("extras", {})
+
+
+class CheckpointManager:
+    """Async manager with retention. One background writer at a time."""
+
+    def __init__(self, directory: str, keep: int = 3):
+        self.directory = directory
+        self.keep = keep
+        self._thread: threading.Thread | None = None
+
+    def save(self, tree, step: int, extras: dict | None = None,
+             blocking: bool = False):
+        self.wait()
+        # snapshot on caller thread (device -> host), write in background
+        paths, leaves, treedef = _flatten_with_paths(tree)
+        host = [np.asarray(jax.device_get(x)) for x in leaves]
+        snap = jax.tree_util.tree_unflatten(treedef, host)
+
+        def _write():
+            save_pytree(snap, self.directory, step, extras)
+            self._gc()
+
+        if blocking:
+            _write()
+        else:
+            self._thread = threading.Thread(target=_write, daemon=True)
+            self._thread.start()
+
+    def wait(self):
+        if self._thread is not None:
+            self._thread.join()
+            self._thread = None
+
+    def restore(self, tree_like, shardings=None, step: int | None = None):
+        return load_pytree(tree_like, self.directory, step, shardings)
+
+    def latest_step(self) -> int | None:
+        steps = committed_steps(self.directory)
+        return steps[-1] if steps else None
+
+    def _gc(self):
+        steps = committed_steps(self.directory)
+        for s in steps[:-self.keep]:
+            shutil.rmtree(os.path.join(self.directory, f"step_{s:08d}"),
+                          ignore_errors=True)

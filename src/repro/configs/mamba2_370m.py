@@ -1,0 +1,23 @@
+"""mamba2-370m [ssm] -- 48L d_model=1024 (attn-free) vocab=50280,
+ssm_state=128, SSD (state-space duality). [arXiv:2405.21060; unverified]
+expand=2 -> d_inner=2048, head_dim=64 -> 32 SSD heads."""
+from repro.models.config import ModelConfig, BlockSpec
+
+CONFIG = ModelConfig(
+    name="mamba2-370m", family="ssm",
+    num_layers=48, d_model=1024, num_heads=0, num_kv_heads=0,
+    head_dim=0, d_ff=0, vocab_size=50280,
+    ssm_state=128, ssm_expand=2, ssm_head_dim=64,
+    tie_embeddings=True,
+    pattern=(BlockSpec(kind="mamba", has_ffn=False),),
+)
+
+SMOKE = ModelConfig(
+    name="mamba2-370m-smoke", family="ssm",
+    num_layers=2, d_model=64, num_heads=0, num_kv_heads=0,
+    head_dim=0, d_ff=0, vocab_size=256,
+    ssm_state=16, ssm_expand=2, ssm_head_dim=32, ssm_chunk=16,
+    tie_embeddings=True,
+    pattern=(BlockSpec(kind="mamba", has_ffn=False),),
+    param_dtype="float32", activation_dtype="float32",
+)

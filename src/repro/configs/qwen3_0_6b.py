@@ -1,0 +1,21 @@
+"""qwen3-0.6b [dense] -- 28L d_model=1024 16H (GQA kv=8) d_ff=3072
+vocab=151936, qk_norm, GQA. [hf:Qwen/Qwen3-8B; hf]
+head_dim=128 (Qwen3 decouples head_dim from d_model/heads)."""
+from repro.models.config import ModelConfig, BlockSpec
+
+CONFIG = ModelConfig(
+    name="qwen3-0.6b", family="dense",
+    num_layers=28, d_model=1024, num_heads=16, num_kv_heads=8,
+    head_dim=128, d_ff=3072, vocab_size=151936,
+    qk_norm=True, rope_theta=1e6, tie_embeddings=True,
+    pattern=(BlockSpec(kind="attn"),),
+)
+
+SMOKE = ModelConfig(
+    name="qwen3-0.6b-smoke", family="dense",
+    num_layers=2, d_model=64, num_heads=4, num_kv_heads=2,
+    head_dim=16, d_ff=128, vocab_size=256,
+    qk_norm=True, rope_theta=1e6, tie_embeddings=True,
+    pattern=(BlockSpec(kind="attn"),),
+    param_dtype="float32", activation_dtype="float32",
+)

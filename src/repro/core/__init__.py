@@ -1,0 +1,14 @@
+from repro.core.arch import FlipArch, DEFAULT_ARCH
+from repro.core.vertex_program import BFS, SSSP, WCC, PROGRAMS, VertexProgram
+from repro.core.mapping import Mapping, RuntimeEstimator, compile_mapping
+from repro.core.tables import RoutingTables, build_tables, scatter_graph
+from repro.core.sim import SimResult, simulate
+from repro.core import baselines
+
+__all__ = [
+    "FlipArch", "DEFAULT_ARCH",
+    "BFS", "SSSP", "WCC", "PROGRAMS", "VertexProgram",
+    "Mapping", "RuntimeEstimator", "compile_mapping",
+    "RoutingTables", "build_tables", "scatter_graph",
+    "SimResult", "simulate", "baselines",
+]

@@ -1,0 +1,3 @@
+from repro.data.pipeline import SyntheticTextDataset, make_batches
+
+__all__ = ["SyntheticTextDataset", "make_batches"]

@@ -1,0 +1,14 @@
+from repro.distributed.sharding import (
+    ShardingRules,
+    DEFAULT_RULES,
+    activation_rules,
+    constrain,
+    logical_to_pspec,
+    mesh_context,
+    current_mesh,
+)
+
+__all__ = [
+    "ShardingRules", "DEFAULT_RULES", "activation_rules", "constrain",
+    "logical_to_pspec", "mesh_context", "current_mesh",
+]

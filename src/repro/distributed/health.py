@@ -1,0 +1,69 @@
+"""Fault tolerance: heartbeat monitoring + supervised restart policy.
+
+At 1000+ nodes the dominant failure mode is a host dropping out; the SPMD
+step then either hangs (collective timeout) or the runtime raises. The
+framework's answer (wired into launch/train.py --supervise):
+
+  * HeartbeatMonitor: the train loop `beat()`s every step from the main
+    thread; a watchdog thread flags a stall (hung collective / dead host)
+    after `timeout_s` and invokes the registered callback.
+  * Supervisor (in launch/train.py): runs the train loop as a subprocess;
+    on nonzero exit or watchdog kill, re-launches it with --resume, which
+    restores the newest committed checkpoint and (via elastic_mesh) a mesh
+    that matches the surviving device set.
+  * step_guard: wraps one train step; converts runtime errors into a
+    StepFailure carrying the step index so the supervisor log shows where.
+
+Straggler mitigation is structural in SPMD (no per-step stragglers within
+a mesh: collectives synchronize); across steps, async checkpointing and
+the prefetching data pipeline keep slow I/O off the critical path.
+"""
+from __future__ import annotations
+
+import dataclasses
+import threading
+import time
+
+
+class StepFailure(RuntimeError):
+    def __init__(self, step: int, cause: BaseException):
+        super().__init__(f"step {step} failed: {cause!r}")
+        self.step = step
+        self.cause = cause
+
+
+@dataclasses.dataclass
+class HeartbeatMonitor:
+    timeout_s: float = 300.0
+    on_stall: callable = None
+    _last: float = dataclasses.field(default_factory=time.monotonic)
+    _stop: bool = False
+    _thread: threading.Thread | None = None
+    stalled: bool = False
+
+    def beat(self):
+        self._last = time.monotonic()
+
+    def start(self):
+        def watch():
+            while not self._stop:
+                time.sleep(min(self.timeout_s / 4, 5.0))
+                if time.monotonic() - self._last > self.timeout_s:
+                    self.stalled = True
+                    if self.on_stall is not None:
+                        self.on_stall()
+                    return
+        self._thread = threading.Thread(target=watch, daemon=True)
+        self._thread.start()
+        return self
+
+    def stop(self):
+        self._stop = True
+
+
+def step_guard(fn, step: int):
+    """Run one step, wrapping failures with their step index."""
+    try:
+        return fn()
+    except Exception as e:                      # noqa: BLE001
+        raise StepFailure(step, e) from e

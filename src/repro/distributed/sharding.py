@@ -1,0 +1,199 @@
+"""Logical-axis sharding (MaxText-style) for the whole framework.
+
+Tensors are annotated with *logical* axis names; a rules table maps them to
+mesh axes. `constrain` is a no-op when no mesh is active, so the exact same
+model code runs on 1 CPU device (smoke tests) and on the 512-chip
+production mesh (dry-run / real launch).
+
+Default layout (DESIGN.md Sec. 5):
+  batch        -> ("pod", "data")   activations: DP over pods + data rows
+  seq          -> "model"           sequence parallelism between blocks
+  kv_seq       -> "model"           decode KV caches (flash-decode style)
+  long_kv_seq  -> ("data","model")  batch=1 long-context decode caches
+  embed        -> "data"            weights: FSDP / ZeRO-3 shard
+  heads/mlp/experts/vocab -> "model"  tensor/expert parallelism
+A logical axis is silently replicated when the tensor dim is not divisible
+by the mesh axis size (e.g. kv_heads=4 on a 16-wide model axis) -- the
+fallback keeps every (arch x mesh) cell compilable; the roofline then
+shows what the fallback costs.
+"""
+from __future__ import annotations
+
+import contextlib
+import dataclasses
+import threading
+
+import jax
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+
+@dataclasses.dataclass(frozen=True)
+class ShardingRules:
+    rules: dict
+
+    def mesh_axes(self, logical: str | None):
+        if logical is None:
+            return None
+        return self.rules.get(logical, None)
+
+
+DEFAULT_RULES = ShardingRules(rules={
+    # activations
+    "batch": ("pod", "data"),
+    "seq": "model",
+    "kv_seq": "model",
+    "long_kv_seq": ("data", "model"),
+    "act_embed": None,
+    "act_heads": "model",
+    "act_mlp": "model",
+    "act_vocab": "model",
+    # weights
+    "embed": "data",
+    "heads": "model",
+    "kv_heads": "model",
+    "head_dim": None,
+    "mlp": "model",
+    "experts": "model",
+    "expert_mlp": None,
+    # MoE grouped dispatch (GShard flow): token groups span all token
+    # shards before dispatch, and DP shards only after the (G,E) reshard
+    "batch_seq_groups": ("pod", "data", "model"),
+    "moe_groups": ("pod", "data"),
+    "vocab": "model",
+    "layers": None,
+    "conv": None,
+    "state": None,
+    "ssm_inner": "model",
+    "ssm_heads": "model",
+})
+
+
+def activation_rules(**overrides) -> ShardingRules:
+    r = dict(DEFAULT_RULES.rules)
+    r.update(overrides)
+    return ShardingRules(rules=r)
+
+
+# --------------------------------------------------------------------- #
+# ambient mesh + rules (thread-local so tests can nest)
+# --------------------------------------------------------------------- #
+class _Ctx(threading.local):
+    def __init__(self):
+        self.mesh: Mesh | None = None
+        self.rules: ShardingRules = DEFAULT_RULES
+
+
+_CTX = _Ctx()
+
+
+@contextlib.contextmanager
+def mesh_context(mesh: Mesh | None, rules: ShardingRules | None = None):
+    prev = (_CTX.mesh, _CTX.rules)
+    _CTX.mesh = mesh
+    if rules is not None:
+        _CTX.rules = rules
+    try:
+        if mesh is not None:
+            with mesh:
+                yield
+        else:
+            yield
+    finally:
+        _CTX.mesh, _CTX.rules = prev
+
+
+def current_mesh() -> Mesh | None:
+    return _CTX.mesh
+
+
+def _axis_ok(mesh: Mesh, dim: int, axes, strict: bool) -> bool:
+    """Shardability check; tuples of mesh axes multiply.
+
+    strict=True (jit ARGUMENT shardings: params, caches) requires exact
+    divisibility -- pjit rejects uneven argument shardings. strict=False
+    (with_sharding_constraint on intermediates) also allows uneven dims
+    >= the axis size: GSPMD pads (e.g. phi3's 40 attention-head
+    activations over a 16-wide model axis -> 3-per-shard, ~17% waste) --
+    vastly better than the 16x memory blowup of replication. Dims smaller
+    than the axis (GQA kv heads) replicate either way.
+    """
+    if axes is None:
+        return True
+    size = 1
+    for a in (axes if isinstance(axes, tuple) else (axes,)):
+        size *= mesh.shape[a]
+    if dim % size == 0:
+        return True
+    # non-strict (intermediates): uneven sharding down to 1/4 occupancy --
+    # even a 4-wide kv-head dim on a 16-wide axis beats replication: the
+    # tensor is never all-gathered, consumers fetch single shards
+    return (not strict) and 4 * dim >= size
+
+
+# parameter-sharding fallbacks: when a tensor dim cannot take its primary
+# mesh axis (e.g. 40 heads on a 16-wide axis, strict mode), a secondary
+# logical axis of the same tensor may claim it instead (head_dim is a
+# multiple of 16 for every assigned arch)
+FALLBACK_RULES = {"head_dim": "model", "expert_mlp": "model",
+                  "ssm_head_dim": "model"}
+
+
+def logical_to_pspec(shape, logical_axes, mesh: Mesh | None = None,
+                     rules: ShardingRules | None = None,
+                     strict: bool = True) -> P:
+    """PartitionSpec for a tensor given its logical axes (never fails:
+    unshardable dims replicate). See _axis_ok for strict semantics."""
+    mesh = mesh or _CTX.mesh
+    rules = rules or _CTX.rules
+    if mesh is None:
+        return P()
+    spec = []
+    used: set = set()
+    for dim, name in zip(shape, logical_axes):
+        axes = rules.mesh_axes(name)
+        if axes is not None:
+            # drop mesh axes absent from this mesh (e.g. "pod" on a
+            # single-pod mesh) or already used by another tensor dim
+            flat = tuple(a for a in
+                         (axes if isinstance(axes, tuple) else (axes,))
+                         if a in mesh.shape and a not in used)
+            axes = flat if flat else None
+            if axes is not None and len(axes) == 1:
+                axes = axes[0]
+        if axes is not None and not _axis_ok(mesh, dim, axes, strict):
+            axes = None
+        if axes is not None:
+            for a in (axes if isinstance(axes, tuple) else (axes,)):
+                used.add(a)
+        spec.append(axes)
+    # second pass: let fallback axes claim still-unused mesh axes (e.g.
+    # shard wq over head_dim when the head count can't take "model")
+    for i, (dim, name) in enumerate(zip(shape, logical_axes)):
+        if spec[i] is not None:
+            continue
+        fb = FALLBACK_RULES.get(name)
+        if fb and fb in mesh.shape and fb not in used \
+                and _axis_ok(mesh, dim, fb, strict):
+            spec[i] = fb
+            used.add(fb)
+    return P(*spec)
+
+
+def constrain(x, *logical_axes):
+    """with_sharding_constraint by logical axes; no-op without a mesh.
+    Intermediates may shard unevenly (strict=False)."""
+    mesh = _CTX.mesh
+    if mesh is None:
+        return x
+    spec = logical_to_pspec(x.shape, logical_axes, mesh, _CTX.rules,
+                            strict=False)
+    return jax.lax.with_sharding_constraint(
+        x, NamedSharding(mesh, spec))
+
+
+def named_sharding(shape, logical_axes, mesh: Mesh | None = None,
+                   rules: ShardingRules | None = None):
+    mesh = mesh or _CTX.mesh
+    assert mesh is not None, "named_sharding requires a mesh"
+    return NamedSharding(mesh, logical_to_pspec(shape, logical_axes, mesh,
+                                                rules))

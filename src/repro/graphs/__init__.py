@@ -1,0 +1,19 @@
+from repro.graphs.csr import Graph
+from repro.graphs.generators import (
+    make_road_network,
+    make_tree,
+    make_synthetic,
+    make_dataset,
+    DATASET_SPECS,
+)
+from repro.graphs import reference
+
+__all__ = [
+    "Graph",
+    "make_road_network",
+    "make_tree",
+    "make_synthetic",
+    "make_dataset",
+    "DATASET_SPECS",
+    "reference",
+]

@@ -1,0 +1,12 @@
+"""Pallas TPU kernels for the perf-critical compute layers.
+
+frontier/  -- the paper's hot loop: frontier-masked tropical (min,+)
+              relaxation over block-sparse adjacency tiles (TPU-native
+              form of FLIP's data-centric PE array, DESIGN.md Sec. 2).
+attention/ -- causal + sliding-window flash attention (train/prefill).
+ssd/       -- Mamba-2 state-space-duality chunked scan.
+
+Each kernel directory ships <name>.py (pl.pallas_call + BlockSpec),
+ops.py (jit'd public wrapper with platform dispatch) and ref.py (pure-jnp
+oracle used by the tests).
+"""

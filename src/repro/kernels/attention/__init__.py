@@ -1,0 +1,4 @@
+from repro.kernels.attention.ops import flash_attention
+from repro.kernels.attention import ref
+
+__all__ = ["flash_attention", "ref"]

@@ -1,0 +1,132 @@
+"""Pallas TPU flash attention (GQA, causal, sliding-window).
+
+Grid: (batch, q_heads, q_blocks, kv_blocks) with the kv dimension
+innermost and "arbitrary" (sequential) so the online-softmax running
+state (m, l, acc) lives in VMEM scratch across kv steps.
+
+Causal/window block skipping is structural: fully-masked (q_blk, kv_blk)
+pairs are skipped with pl.when, so HLO-level work matches ~S^2/2 for
+causal and ~S*W for sliding windows -- the same property the lax_flash
+fallback has, and the TPU analogue of FLIP's "inactive PEs don't fire".
+
+Block sizes: bq x bkv tiles of the score matrix; defaults 512x512 keep
+the VMEM working set (q blk + k blk + v blk + scores + acc) under ~2.5
+MiB for hd <= 256.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -1e30
+
+
+def _flash_kernel(q_ref, k_ref, v_ref, o_ref,
+                  m_sc, l_sc, acc_sc,
+                  *, bq, bkv, nkv, causal, window, scale):
+    qi = pl.program_id(2)
+    ki = pl.program_id(3)
+
+    # valid kv-block range for this q block
+    last = qi * bq // bkv if causal else nkv - 1
+    first = 0
+    if window is not None:
+        first = jnp.maximum(0, (qi * bq - window) // bkv)
+
+    @pl.when(ki == 0)
+    def _init():
+        m_sc[...] = jnp.full_like(m_sc, NEG_INF)
+        l_sc[...] = jnp.zeros_like(l_sc)
+        acc_sc[...] = jnp.zeros_like(acc_sc)
+
+    in_range = jnp.logical_and(ki >= first, ki <= last)
+
+    @pl.when(in_range)
+    def _block():
+        q = q_ref[0, 0].astype(jnp.float32)      # (bq, hd)
+        k = k_ref[0, 0].astype(jnp.float32)      # (bkv, hd)
+        v = v_ref[0, 0].astype(jnp.float32)
+        s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
+                                preferred_element_type=jnp.float32)
+        s = s * scale                             # (bq, bkv)
+        q_pos = qi * bq + jax.lax.broadcasted_iota(jnp.int32, (bq, bkv), 0)
+        k_pos = ki * bkv + jax.lax.broadcasted_iota(jnp.int32, (bq, bkv), 1)
+        ok = jnp.ones((bq, bkv), jnp.bool_)
+        if causal:
+            ok = jnp.logical_and(ok, k_pos <= q_pos)
+        if window is not None:
+            ok = jnp.logical_and(ok, k_pos > q_pos - window)
+        s = jnp.where(ok, s, NEG_INF)
+
+        m_prev = m_sc[...]
+        m_new = jnp.maximum(m_prev, s.max(axis=1))
+        p = jnp.exp(s - m_new[:, None])
+        corr = jnp.exp(m_prev - m_new)
+        l_sc[...] = l_sc[...] * corr + p.sum(axis=1)
+        acc_sc[...] = acc_sc[...] * corr[:, None] + jax.lax.dot_general(
+            p, v, (((1,), (0,)), ((), ())),
+            preferred_element_type=jnp.float32)
+        m_sc[...] = m_new
+
+    @pl.when(ki == nkv - 1)
+    def _finish():
+        l = jnp.maximum(l_sc[...], 1e-30)
+        o_ref[0, 0] = (acc_sc[...] / l[:, None]).astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("causal", "window", "bq",
+                                             "bkv", "interpret"))
+def flash_attention_pallas(q, k, v, causal: bool = True,
+                           window: int | None = None,
+                           bq: int = 512, bkv: int = 512,
+                           interpret: bool = False):
+    """q: (B,S,H,hd); k/v: (B,T,KH,hd). Returns (B,S,H,hd)."""
+    b, s, h, hd = q.shape
+    t, kh = k.shape[1], k.shape[2]
+    g = h // kh
+    bq = min(bq, s)
+    bkv = min(bkv, t)
+    assert s % bq == 0 and t % bkv == 0
+    nq, nkv = s // bq, t // bkv
+    scale = 1.0 / np.sqrt(hd)
+
+    # layout: (B, H, S, hd) blocks
+    qt = q.transpose(0, 2, 1, 3)
+    kt = k.transpose(0, 2, 1, 3)
+    vt = v.transpose(0, 2, 1, 3)
+
+    kernel = functools.partial(_flash_kernel, bq=bq, bkv=bkv, nkv=nkv,
+                               causal=causal, window=window, scale=scale)
+    kwargs = {}
+    if not interpret:
+        kwargs["compiler_params"] = pltpu.CompilerParams(
+            dimension_semantics=("parallel", "parallel", "parallel",
+                                 "arbitrary"))
+    out = pl.pallas_call(
+        kernel,
+        grid=(b, h, nq, nkv),
+        in_specs=[
+            pl.BlockSpec((1, 1, bq, hd),
+                         lambda bb, hh, qi, ki: (bb, hh, qi, 0)),
+            pl.BlockSpec((1, 1, bkv, hd),
+                         lambda bb, hh, qi, ki, g=g: (bb, hh // g, ki, 0)),
+            pl.BlockSpec((1, 1, bkv, hd),
+                         lambda bb, hh, qi, ki, g=g: (bb, hh // g, ki, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, bq, hd),
+                               lambda bb, hh, qi, ki: (bb, hh, qi, 0)),
+        out_shape=jax.ShapeDtypeStruct((b, h, s, hd), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((bq,), jnp.float32),
+            pltpu.VMEM((bq,), jnp.float32),
+            pltpu.VMEM((bq, hd), jnp.float32),
+        ],
+        interpret=interpret,
+        **kwargs,
+    )(qt, kt, vt)
+    return out.transpose(0, 2, 1, 3)

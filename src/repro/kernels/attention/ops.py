@@ -1,0 +1,15 @@
+"""Public flash attention op with platform dispatch."""
+from __future__ import annotations
+
+import jax
+
+from repro.kernels.attention.flash import flash_attention_pallas
+from repro.kernels.attention.ref import attention_ref
+
+
+def flash_attention(q, k, v, causal: bool = True, window: int | None = None,
+                    interpret: bool | None = None, **kw):
+    if interpret is None:
+        interpret = jax.default_backend() != "tpu"
+    return flash_attention_pallas(q, k, v, causal=causal, window=window,
+                                  interpret=interpret, **kw)

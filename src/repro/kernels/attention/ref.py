@@ -1,0 +1,29 @@
+"""Pure-jnp oracle for flash attention (GQA, causal, sliding window)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+NEG_INF = -1e30
+
+
+def attention_ref(q, k, v, causal: bool = True, window: int | None = None):
+    """q: (B,S,H,hd); k/v: (B,T,KH,hd) with H % KH == 0."""
+    b, s, h, hd = q.shape
+    t, kh = k.shape[1], k.shape[2]
+    g = h // kh
+    qr = q.reshape(b, s, kh, g, hd)
+    scores = jnp.einsum("bskgd,btkd->bkgst", qr, k).astype(jnp.float32)
+    scores = scores / np.sqrt(hd)
+    q_pos = jnp.arange(s)[:, None]
+    k_pos = jnp.arange(t)[None, :]
+    ok = jnp.ones((s, t), bool)
+    if causal:
+        ok &= k_pos <= q_pos
+    if window is not None:
+        ok &= k_pos > q_pos - window
+    scores = jnp.where(ok, scores, NEG_INF)
+    p = jax.nn.softmax(scores, axis=-1)
+    out = jnp.einsum("bkgst,btkd->bskgd", p.astype(v.dtype), v)
+    return out.reshape(b, s, h, hd)

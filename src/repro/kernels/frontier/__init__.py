@@ -1,0 +1,8 @@
+from repro.kernels.frontier.ops import (
+    frontier_relax,
+    build_blocks,
+    BlockedGraph,
+)
+from repro.kernels.frontier import ref
+
+__all__ = ["frontier_relax", "build_blocks", "BlockedGraph", "ref"]

@@ -1,0 +1,130 @@
+"""Public ops for the frontier relaxation kernel.
+
+`build_blocks` converts a CSR graph (+ optional FLIP mapping, whose
+vertex->PE placement becomes the vertex->tile permutation: the compiled
+placement minimizes cross-tile edges exactly like it minimizes NoC hops)
+into the block-sparse tile form the kernel consumes.
+
+`frontier_relax` dispatches: Pallas on TPU, Pallas-interpret when forced
+(tests), and a vectorized segment-min jnp fallback elsewhere (CPU).
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.graphs.csr import Graph
+from repro.kernels.frontier.frontier import frontier_relax_pallas
+
+INF = np.float32(np.inf)
+
+
+@dataclasses.dataclass
+class BlockedGraph:
+    """Block-sparse tiled adjacency in (min,+) form."""
+    n: int                      # true vertex count
+    tile: int                   # T
+    ntiles: int
+    blocks: jnp.ndarray         # (nb, T, T) f32, +inf = no edge
+    bsrc: jnp.ndarray           # (nb,) i32, sorted by (bdst, bsrc)
+    bdst: jnp.ndarray           # (nb,) i32
+    perm: np.ndarray            # original vertex id -> tiled position
+    inv_perm: np.ndarray        # tiled position -> original vertex id
+
+    @property
+    def padded_n(self) -> int:
+        return self.ntiles * self.tile
+
+    def to_tiled(self, attrs_orig: np.ndarray, fill=INF) -> jnp.ndarray:
+        out = np.full(self.padded_n, fill, dtype=np.float32)
+        out[self.perm] = attrs_orig
+        return jnp.asarray(out.reshape(self.ntiles, self.tile))
+
+    def to_orig(self, attrs_tiled) -> np.ndarray:
+        flat = np.asarray(attrs_tiled).reshape(-1)
+        return flat[self.perm]
+
+
+def build_blocks(graph: Graph, algo: str = "sssp", tile: int = 128,
+                 order: np.ndarray | None = None) -> BlockedGraph:
+    """Block-sparse (min,+) adjacency.
+
+    algo: 'bfs' (unit weights), 'sssp' (edge weights), 'wcc' (zero weights,
+    symmetrized). `order`: optional vertex ordering (e.g. from the FLIP
+    mapping compiler); order[k] = original id of the vertex at tiled
+    position k.
+    """
+    n = graph.n
+    if order is None:
+        order = np.arange(n)
+    perm = np.empty(n, dtype=np.int64)     # original -> position
+    perm[order] = np.arange(n)
+
+    ntiles = max(1, -(-n // tile))
+    edges = []
+    for u, v, w in graph.edge_list():
+        if algo == "bfs":
+            wval = 1.0
+        elif algo == "wcc":
+            wval = 0.0
+        else:
+            wval = w
+        edges.append((perm[u], perm[v], wval))
+        if algo == "wcc":
+            edges.append((perm[v], perm[u], wval))
+
+    by_block: dict[tuple[int, int], list[tuple[int, int, float]]] = {}
+    for pu, pv, w in edges:
+        key = (pv // tile, pu // tile)     # (dst, src) for the sort
+        by_block.setdefault(key, []).append((pu % tile, pv % tile, w))
+
+    # every destination tile must appear at least once so its output block
+    # is initialized from attrs (blocks of all-inf act as identity)
+    for d in range(ntiles):
+        by_block.setdefault((d, d), [])
+
+    keys = sorted(by_block)
+    nb = len(keys)
+    blocks = np.full((nb, tile, tile), INF, dtype=np.float32)
+    bsrc = np.empty(nb, dtype=np.int32)
+    bdst = np.empty(nb, dtype=np.int32)
+    for i, (d, s) in enumerate(keys):
+        bdst[i], bsrc[i] = d, s
+        for su, dv, w in by_block[(d, s)]:
+            blocks[i, su, dv] = min(blocks[i, su, dv], np.float32(w))
+    return BlockedGraph(n=n, tile=tile, ntiles=ntiles,
+                        blocks=jnp.asarray(blocks),
+                        bsrc=jnp.asarray(bsrc), bdst=jnp.asarray(bdst),
+                        perm=perm, inv_perm=np.asarray(order))
+
+
+# --------------------------------------------------------------------- #
+# dispatching step op
+# --------------------------------------------------------------------- #
+@jax.jit
+def _relax_jnp(src_vals, attrs, blocks, bsrc, bdst):
+    """Vectorized fallback: per-block candidate + segment-min by bdst."""
+    ntiles, t = attrs.shape
+    sv = src_vals[bsrc]                                  # (nb, T)
+    cand = jnp.min(sv[:, :, None] + blocks, axis=1)      # (nb, T)
+    best = jax.ops.segment_min(cand, bdst, num_segments=ntiles)
+    return jnp.minimum(attrs, best)
+
+
+def frontier_relax(src_vals, attrs, bg: BlockedGraph, mode: str = "auto"):
+    """One frontier relaxation step over a BlockedGraph.
+
+    src_vals: (ntiles, T) f32 -- attrs where active, +inf where not.
+    attrs:    (ntiles, T) f32 current attributes.
+    mode: 'auto' | 'pallas' | 'interpret' | 'jnp'.
+    """
+    if mode == "auto":
+        mode = "pallas" if jax.default_backend() == "tpu" else "jnp"
+    if mode == "jnp":
+        return _relax_jnp(src_vals, attrs, bg.blocks, bg.bsrc, bg.bdst)
+    return frontier_relax_pallas(src_vals, attrs, bg.blocks, bg.bsrc,
+                                 bg.bdst, interpret=(mode == "interpret"))

@@ -1,0 +1,4 @@
+from repro.kernels.ssd.ops import ssd_chunked
+from repro.kernels.ssd import ref
+
+__all__ = ["ssd_chunked", "ref"]

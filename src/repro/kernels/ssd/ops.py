@@ -1,0 +1,23 @@
+"""Public op for the SSD layer: platform dispatch.
+
+On TPU the intra-chunk quadratic form runs in the Pallas kernel
+(ssd.py); elsewhere (CPU smoke tests, dry-run lowering) the pure-jnp
+chunked form from ref.py is used -- same math, same chunk structure, so
+HLO FLOPs are representative.
+"""
+from __future__ import annotations
+
+import jax
+
+from repro.kernels.ssd.ref import ssd_ref
+
+
+def ssd_chunked(x, dt, Bm, Cm, A_log, D, chunk: int = 64, h0=None,
+                impl: str = "auto"):
+    if impl == "auto":
+        impl = "pallas" if jax.default_backend() == "tpu" else "jnp"
+    if impl in ("pallas", "pallas_interpret"):
+        from repro.kernels.ssd.ssd import ssd_pallas
+        return ssd_pallas(x, dt, Bm, Cm, A_log, D, chunk=chunk, h0=h0,
+                          interpret=(impl == "pallas_interpret"))
+    return ssd_ref(x, dt, Bm, Cm, A_log, D, chunk=chunk, h0=h0)

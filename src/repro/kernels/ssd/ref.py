@@ -1,0 +1,84 @@
+"""Pure-jnp oracle: Mamba-2 SSD (state-space duality) chunked scan.
+
+Semantics (per head h, state size N, head dim P):
+    h_t = a_t * h_{t-1} + dt_t * B_t (x) x_t          a_t = exp(-exp(A_log) dt_t)
+    y_t = C_t . h_t + D * x_t
+
+Chunked O(L*Q) evaluation (arXiv:2405.21060): within a chunk the quadratic
+"attention" form with decay mask; across chunks a sequential state carry.
+
+Shapes: x (B,L,H,P); dt (B,L,H); Bm/Cm (B,L,N); A_log (H,); D (H,).
+Also exposes `ssd_step_ref` for single-token decode.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def ssd_ref(x, dt, Bm, Cm, A_log, D, chunk: int = 64, h0=None):
+    """Returns (y (B,L,H,P), h_final (B,H,N,P))."""
+    b, l, h, p = x.shape
+    n = Bm.shape[-1]
+    assert l % chunk == 0, (l, chunk)
+    nc, q = l // chunk, chunk
+    f32 = jnp.float32
+
+    la = (-jnp.exp(A_log.astype(f32))[None, None, :]
+          * dt.astype(f32))                    # (B,L,H) log decay
+    dtx = x.astype(f32) * dt.astype(f32)[..., None]    # (B,L,H,P)
+
+    # chunked views
+    la_c = la.reshape(b, nc, q, h)
+    x_c = dtx.reshape(b, nc, q, h, p)
+    B_c = Bm.astype(f32).reshape(b, nc, q, n)
+    C_c = Cm.astype(f32).reshape(b, nc, q, n)
+    cums = jnp.cumsum(la_c, axis=2)                    # inclusive
+    last = cums[:, :, -1:, :]                          # (B,nc,1,H)
+
+    # intra-chunk quadratic form
+    G = jnp.einsum("bcin,bcjn->bcij", C_c, B_c)        # (B,nc,Q,Q)
+    diff = cums[:, :, :, None, :] - cums[:, :, None, :, :]   # (B,nc,Q,Q,H)
+    mask = jnp.tril(jnp.ones((q, q), bool))
+    # mask BEFORE exp: for i<j diff is large-positive; exp would overflow
+    # and its cotangent would be inf*0=NaN through the where
+    decay = jnp.exp(jnp.where(mask[None, None, :, :, None], diff, -jnp.inf))
+    att = G[..., None] * decay                         # (B,nc,Q,Q,H)
+    y_intra = jnp.einsum("bcijh,bcjhp->bcihp", att, x_c)
+
+    # per-chunk outgoing state
+    dec_out = jnp.exp(last - cums)                     # (B,nc,Q,H)
+    S = jnp.einsum("bcjh,bcjn,bcjhp->bchnp", dec_out, B_c, x_c)
+
+    # sequential inter-chunk recurrence
+    chunk_decay = jnp.exp(last[:, :, 0, :])            # (B,nc,H)
+    if h0 is None:
+        h0 = jnp.zeros((b, h, n, p), f32)
+
+    def step(hprev, inputs):
+        s_c, cd = inputs                               # (B,H,N,P),(B,H)
+        hnew = cd[:, :, None, None] * hprev + s_c
+        return hnew, hprev
+
+    hfin, hprevs = jax.lax.scan(
+        step, h0, (S.transpose(1, 0, 2, 3, 4), chunk_decay.transpose(1, 0, 2)))
+    hprevs = hprevs.transpose(1, 0, 2, 3, 4)           # (B,nc,H,N,P)
+
+    dec_in = jnp.exp(cums)                             # (B,nc,Q,H)
+    y_inter = jnp.einsum("bcin,bchnp,bcih->bcihp", C_c, hprevs, dec_in)
+    y = (y_intra + y_inter).reshape(b, l, h, p)
+    y = y + x.astype(f32) * D.astype(f32)[None, None, :, None]
+    return y.astype(x.dtype), hfin
+
+
+def ssd_step_ref(x, dt, Bm, Cm, A_log, D, hprev):
+    """Single decode step. x (B,H,P); dt (B,H); Bm/Cm (B,N);
+    hprev (B,H,N,P). Returns (y (B,H,P), h)."""
+    f32 = jnp.float32
+    a = jnp.exp(-jnp.exp(A_log.astype(f32))[None, :] * dt.astype(f32))
+    dtx = x.astype(f32) * dt.astype(f32)[..., None]    # (B,H,P)
+    h = a[:, :, None, None] * hprev \
+        + jnp.einsum("bn,bhp->bhnp", Bm.astype(f32), dtx)
+    y = jnp.einsum("bn,bhnp->bhp", Cm.astype(f32), h)
+    y = y + x.astype(f32) * D.astype(f32)[None, :, None]
+    return y.astype(x.dtype), h

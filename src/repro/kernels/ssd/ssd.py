@@ -1,0 +1,122 @@
+"""Pallas TPU kernel for the SSD intra-chunk quadratic form.
+
+Per (batch, chunk, head) grid cell, in VMEM:
+    G     = C_c B_c^T                      (Q x Q "attention" scores)
+    att   = G * exp(cums_i - cums_j) * tril
+    y     = att @ (dt*x)                   intra-chunk output
+    S     = (B_c * exp(last - cums))^T (dt*x)   outgoing chunk state
+The O(L) inter-chunk recurrence (tiny, sequential) and the y_inter
+correction stay in jax.lax.scan in ops.py -- the quadratic part is
+>95% of the FLOPs and is what the MXU should run.
+
+VMEM working set (Q=256, N=128, P=64 fp32): ~1 MiB.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _ssd_kernel(c_ref, b_ref, x_ref, cums_ref, y_ref, s_ref):
+    C = c_ref[0, 0].astype(jnp.float32)           # (Q, N)
+    B = b_ref[0, 0].astype(jnp.float32)           # (Q, N)
+    x = x_ref[0, 0, :, 0].astype(jnp.float32)     # (Q, P)
+    cums = cums_ref[0, 0, :, 0].astype(jnp.float32)   # (Q,)
+
+    q = C.shape[0]
+    G = jax.lax.dot_general(C, B, (((1,), (1,)), ((), ())),
+                            preferred_element_type=jnp.float32)  # (Q,Q)
+    diff = cums[:, None] - cums[None, :]
+    ii = jax.lax.broadcasted_iota(jnp.int32, (q, q), 0)
+    jj = jax.lax.broadcasted_iota(jnp.int32, (q, q), 1)
+    # mask before exp (overflow + NaN-cotangent safety, same as ref.py)
+    att = G * jnp.exp(jnp.where(ii >= jj, diff, -jnp.inf))
+    y = jax.lax.dot_general(att, x, (((1,), (0,)), ((), ())),
+                            preferred_element_type=jnp.float32)  # (Q,P)
+    y_ref[0, 0, :, 0] = y.astype(y_ref.dtype)
+
+    dec_out = jnp.exp(cums[-1] - cums)            # (Q,)
+    bw = B * dec_out[:, None]                     # (Q,N)
+    s = jax.lax.dot_general(bw, x, (((0,), (0,)), ((), ())),
+                            preferred_element_type=jnp.float32)  # (N,P)
+    s_ref[0, 0, 0] = s.astype(s_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def ssd_intra_pallas(C, B, dtx, cums, interpret: bool = False):
+    """C/B: (b,nc,Q,N); dtx: (b,nc,Q,H,P); cums: (b,nc,Q,H).
+    Returns (y_intra (b,nc,Q,H,P) f32, S (b,nc,H,N,P) f32)."""
+    b, nc, q, n = C.shape
+    h, p = dtx.shape[3], dtx.shape[4]
+    kwargs = {}
+    if not interpret:
+        kwargs["compiler_params"] = pltpu.CompilerParams(
+            dimension_semantics=("parallel", "parallel", "parallel"))
+    y, s = pl.pallas_call(
+        _ssd_kernel,
+        grid=(b, nc, h),
+        in_specs=[
+            pl.BlockSpec((1, 1, q, n), lambda bb, cc, hh: (bb, cc, 0, 0)),
+            pl.BlockSpec((1, 1, q, n), lambda bb, cc, hh: (bb, cc, 0, 0)),
+            pl.BlockSpec((1, 1, q, 1, p),
+                         lambda bb, cc, hh: (bb, cc, 0, hh, 0)),
+            pl.BlockSpec((1, 1, q, 1), lambda bb, cc, hh: (bb, cc, 0, hh)),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, 1, q, 1, p),
+                         lambda bb, cc, hh: (bb, cc, 0, hh, 0)),
+            pl.BlockSpec((1, 1, 1, n, p),
+                         lambda bb, cc, hh: (bb, cc, hh, 0, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((b, nc, q, h, p), jnp.float32),
+            jax.ShapeDtypeStruct((b, nc, h, n, p), jnp.float32),
+        ],
+        interpret=interpret,
+        **kwargs,
+    )(C, B, dtx, cums)
+    return y, s
+
+
+def ssd_pallas(x, dt, Bm, Cm, A_log, D, chunk: int = 64, h0=None,
+               interpret: bool = False):
+    """Full SSD with the Pallas intra-chunk kernel (same contract as
+    ref.ssd_ref)."""
+    b, l, h, p = x.shape
+    n = Bm.shape[-1]
+    assert l % chunk == 0
+    nc, q = l // chunk, chunk
+    f32 = jnp.float32
+
+    la = -jnp.exp(A_log.astype(f32))[None, None, :] * dt.astype(f32)
+    dtx = (x.astype(f32) * dt.astype(f32)[..., None]).reshape(
+        b, nc, q, h, p)
+    la_c = la.reshape(b, nc, q, h)
+    cums = jnp.cumsum(la_c, axis=2)
+    last = cums[:, :, -1:, :]
+    B_c = Bm.astype(f32).reshape(b, nc, q, n)
+    C_c = Cm.astype(f32).reshape(b, nc, q, n)
+
+    y_intra, S = ssd_intra_pallas(C_c, B_c, dtx, cums, interpret=interpret)
+
+    chunk_decay = jnp.exp(last[:, :, 0, :])
+    if h0 is None:
+        h0 = jnp.zeros((b, h, n, p), f32)
+
+    def step(hprev, inputs):
+        s_c, cd = inputs
+        return cd[:, :, None, None] * hprev + s_c, hprev
+
+    hfin, hprevs = jax.lax.scan(
+        step, h0, (S.transpose(1, 0, 2, 3, 4),
+                   chunk_decay.transpose(1, 0, 2)))
+    hprevs = hprevs.transpose(1, 0, 2, 3, 4)
+    dec_in = jnp.exp(cums)
+    y_inter = jnp.einsum("bcin,bchnp,bcih->bcihp", C_c, hprevs, dec_in)
+    y = (y_intra + y_inter).reshape(b, l, h, p)
+    y = y + x.astype(f32) * D.astype(f32)[None, None, :, None]
+    return y.astype(x.dtype), hfin

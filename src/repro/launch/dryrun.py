@@ -1,0 +1,436 @@
+import os
+os.environ["XLA_FLAGS"] = (os.environ.get("XLA_FLAGS", "")
+                           + " --xla_force_host_platform_device_count=512")
+
+"""Multi-pod dry-run: lower + compile every (arch x shape x mesh) cell.
+
+For each cell:
+  * builds the production mesh ((16,16) single-pod / (2,16,16) multi-pod),
+  * jit's the step with in/out shardings from the declaration tables,
+  * .lower(**input_specs).compile()  -- proving the distribution config is
+    coherent (sharding mismatches, compile-time OOM, unsupported
+    collectives all fail here),
+  * records memory_analysis / cost_analysis / per-collective operand bytes
+    parsed from the optimized HLO into experiments/dryrun/<cell>.json
+    (EXPERIMENTS.md §Dry-run and §Roofline are generated from these).
+
+Usage:
+  python -m repro.launch.dryrun --arch qwen3_0_6b --shape train_4k \
+      [--multi-pod] [--moe-dispatch gspmd] [--out DIR]
+  python -m repro.launch.dryrun --all [--multi-pod]   # every runnable cell
+"""
+import argparse
+import json
+import re
+import time
+import traceback
+
+import jax
+import numpy as np
+
+from repro import configs as C
+from repro.distributed.sharding import DEFAULT_RULES, mesh_context
+from repro.launch import mesh as mesh_lib
+from repro.launch import steps as S
+from repro.optim.adamw import AdamWConfig
+
+COLLECTIVE_OPS = ("all-gather", "all-reduce", "reduce-scatter",
+                  "all-to-all", "collective-permute")
+
+# hardware constants (TPU v5e targets; DESIGN.md Sec. 9)
+PEAK_FLOPS = 197e12          # bf16 / chip
+HBM_BW = 819e9               # B/s / chip
+ICI_BW = 50e9                # B/s usable per chip (assignment constant)
+
+_DTYPE_BYTES = {"f32": 4, "bf16": 2, "f16": 2, "s32": 4, "u32": 4,
+                "s8": 1, "u8": 1, "pred": 1, "f64": 8, "s64": 8,
+                "u64": 8, "s16": 2, "u16": 2, "f8e4m3fn": 1,
+                "f8e5m2": 1, "c64": 8, "c128": 16, "bf16[": 2}
+
+
+def _shape_bytes(shape_str: str) -> int:
+    """Bytes of one HLO shape literal like 'bf16[16,1024,128]{...}'."""
+    m = re.match(r"([a-z0-9]+)\[([0-9,]*)\]", shape_str.strip())
+    if not m:
+        return 0
+    dt, dims = m.group(1), m.group(2)
+    nbytes = _DTYPE_BYTES.get(dt)
+    if nbytes is None:
+        return 0
+    n = 1
+    for d in dims.split(","):
+        if d:
+            n *= int(d)
+    return n * nbytes
+
+
+def collective_bytes(hlo_text: str) -> dict:
+    """Sum operand bytes of every collective op in optimized HLO.
+
+    Works on the per-op output shape (for all-gather and all-to-all the
+    output is the full exchanged payload; for all-reduce/reduce-scatter
+    the operand is; we take max(operand, output) as the wire-cost proxy).
+    """
+    out = {k: 0 for k in COLLECTIVE_OPS}
+    counts = {k: 0 for k in COLLECTIVE_OPS}
+    # lines look like:  %ag = bf16[16,..]{..} all-gather(bf16[1,..]{..} %x), ...
+    for line in hlo_text.splitlines():
+        line = line.strip()
+        m = re.match(r"%?[\w.\-]+\s*=\s*(\([^)]*\)|[a-z0-9]+\[[0-9,]*\]\S*)\s+"
+                     r"([a-z\-]+)", line)
+        if not m:
+            continue
+        op = m.group(2)
+        if op not in COLLECTIVE_OPS:
+            continue
+        shape_part = m.group(1)
+        if shape_part.startswith("("):
+            shapes = re.findall(r"[a-z0-9]+\[[0-9,]*\]", shape_part)
+            out_bytes = sum(_shape_bytes(s) for s in shapes)
+        else:
+            out_bytes = _shape_bytes(shape_part)
+        # operand shapes inside the call parens
+        call = line[line.find(op) + len(op):]
+        op_shapes = re.findall(r"[a-z0-9]+\[[0-9,]*\]", call)
+        operand_bytes = sum(_shape_bytes(s) for s in op_shapes)
+        out[op] += max(out_bytes, operand_bytes)
+        counts[op] += 1
+    out["counts"] = counts
+    return out
+
+
+def _cost_of(jitted, *abstract_args):
+    lowered = jitted.lower(*abstract_args)
+    compiled = lowered.compile()
+    cost = compiled.cost_analysis()
+    coll = collective_bytes(compiled.as_text())
+    return {
+        "flops": float(cost.get("flops", 0.0)),
+        "bytes": float(cost.get("bytes accessed", 0.0)),
+        "coll": sum(v for k, v in coll.items() if k != "counts"),
+        "collectives": coll,
+    }
+
+
+def measure_components(cfg, shape: str, mesh, rules, moe_dispatch: str):
+    """Roofline terms assembled from per-component compiles.
+
+    XLA's cost model counts while/scan bodies once, so the whole-program
+    numbers undercount depth. Here: total = superblock x repeat + head
+    (+ embed). Inner attention kv-scans are unrolled in measurement mode
+    so every visited block is counted.
+    """
+    import jax.numpy as jnp
+    from repro.models import model as M
+    from repro.models.layers import abstract_tree, ParamDecl
+    from repro.distributed.sharding import logical_to_pspec
+    from jax.sharding import NamedSharding
+
+    spec = C.SHAPES[shape]
+    B, S_len = spec["global_batch"], spec["seq_len"]
+    step_kind = spec["step"]
+    long_ctx = shape == "long_500k"
+    act = jnp.bfloat16 if cfg.activation_dtype == "bfloat16" \
+        else jnp.float32
+
+    decls = M.superblock_decls(cfg)
+    lp = abstract_tree(decls, jnp.bfloat16
+                       if cfg.param_dtype == "bfloat16" else jnp.float32)
+    lp_sh = jax.tree_util.tree_map(
+        lambda d: NamedSharding(mesh, logical_to_pspec(
+            d.shape, d.logical_axes, mesh, rules)),
+        decls, is_leaf=lambda x: isinstance(x, ParamDecl))
+    x_spec = jax.ShapeDtypeStruct((B, S_len if step_kind != "decode"
+                                   else 1, cfg.d_model), act)
+    x_sh = NamedSharding(mesh, logical_to_pspec(
+        x_spec.shape, ("batch", "seq", None), mesh, rules))
+
+    params = S.M.abstract_params(cfg)
+    params_sh = S.param_shardings(cfg, mesh, rules)
+
+    if step_kind in ("train", "prefill"):
+        grad_it = step_kind == "train"
+
+        def layer_fn(lp_, x):
+            out, aux = M.apply_superblock(
+                lp_, x, cfg, impl="lax_flash_unrolled",
+                moe_dispatch=moe_dispatch, remat=grad_it)
+            return jnp.sum(out.astype(jnp.float32)) + aux
+
+        if grad_it:
+            # grads carry the param/activation shardings, exactly like the
+            # real train step (otherwise XLA replicates them with plain
+            # all-reduces and the collective term overstates)
+            f = jax.jit(jax.grad(layer_fn, argnums=(0, 1)),
+                        in_shardings=(lp_sh, x_sh),
+                        out_shardings=(lp_sh, x_sh))
+        else:
+            f = jax.jit(layer_fn, in_shardings=(lp_sh, x_sh))
+        layer = _cost_of(f, lp, x_spec)
+
+        # head: embed + final norm + CE (train) or logits (prefill)
+        ins = S.input_specs(cfg, S_len, B, step_kind)
+        batch_sh = S.batch_shardings(ins["batch"], mesh, rules)
+
+        if step_kind == "train":
+            def head_fn(params_, batch):
+                x = M.embed_inputs(params_, batch, cfg)
+                return M.head_loss(params_, x.astype(act),
+                                   batch["labels"], cfg,
+                                   scan_chunks=False)
+            fh = jax.jit(jax.grad(head_fn), in_shardings=(params_sh,
+                                                          batch_sh))
+        else:
+            def head_fn(params_, batch):
+                x = M.embed_inputs(params_, batch, cfg)
+                last = x[:, -1:]
+                return jnp.einsum("bsd,vd->bsv", last,
+                                  params_.get("lm_head", params_["embed"]))
+            fh = jax.jit(head_fn, in_shardings=(params_sh, batch_sh))
+        head = _cost_of(fh, params, ins["batch"])
+    else:
+        # decode: one superblock step + head logits
+        cache_abs = M.abstract_cache(cfg, B, S_len, long_ctx=long_ctx)
+        cache_axes = M.cache_logical_axes(cfg, long_ctx=long_ctx)
+        one = {k: jax.tree_util.tree_map(
+                   lambda a: jax.ShapeDtypeStruct(a.shape[1:], a.dtype),
+                   v) for k, v in cache_abs.items()}
+        one_axes = {k: jax.tree_util.tree_map(
+                        lambda ax: ax[1:], v, is_leaf=lambda x:
+                        isinstance(x, tuple)) for k, v in
+                    cache_axes.items()}
+        one_sh = jax.tree_util.tree_map(
+            lambda a, ax: NamedSharding(mesh, logical_to_pspec(
+                a.shape, ax, mesh, rules)),
+            one, one_axes,
+            is_leaf=lambda x: isinstance(x, jax.ShapeDtypeStruct))
+        pos_spec = jax.ShapeDtypeStruct((B,), jnp.int32)
+        pos_sh = NamedSharding(mesh, logical_to_pspec(
+            (B,), ("batch",), mesh, rules))
+
+        def layer_fn(lp_, c_, x, pos):
+            return M.superblock_decode(lp_, c_, x, pos, cfg,
+                                       long_ctx=long_ctx,
+                                       moe_dispatch=moe_dispatch)
+        f = jax.jit(layer_fn, in_shardings=(lp_sh, one_sh, x_sh, pos_sh))
+        layer = _cost_of(f, lp, one, x_spec, pos_spec)
+
+        def head_fn(params_, tokens):
+            x = jnp.take(params_["embed"], tokens, axis=0).astype(act)
+            return jnp.einsum("bsd,vd->bsv", x,
+                              params_.get("lm_head", params_["embed"]))
+        tok_spec = jax.ShapeDtypeStruct((B, 1), jnp.int32)
+        tok_sh = NamedSharding(mesh, logical_to_pspec(
+            (B, 1), ("batch", None), mesh, rules))
+        fh = jax.jit(head_fn, in_shardings=(params_sh, tok_sh))
+        head = _cost_of(fh, params, tok_spec)
+
+    rep = cfg.repeat
+    return {
+        "layer": layer, "head": head, "repeat": rep,
+        "flops": layer["flops"] * rep + head["flops"],
+        "bytes": layer["bytes"] * rep + head["bytes"],
+        "coll": layer["coll"] * rep + head["coll"],
+    }
+
+
+def run_cell(arch: str, shape: str, multi_pod: bool = False,
+             moe_dispatch: str = "gspmd", rules=DEFAULT_RULES,
+             save_dir: str | None = "experiments/dryrun",
+             components: bool = True,
+             tag: str = "") -> dict:
+    cfg = C.get(arch)
+    spec = C.SHAPES[shape]
+    ok, reason = C.shape_supported(cfg, shape)
+    if not ok:
+        return {"arch": arch, "shape": shape, "skipped": reason}
+
+    mesh = mesh_lib.make_production_mesh(multi_pod=multi_pod)
+    long_ctx = shape == "long_500k"
+    step_kind = spec["step"]
+    t0 = time.time()
+    with mesh_context(mesh, rules):
+        if step_kind == "train":
+            opt_cfg = AdamWConfig(
+                moment_dtype=("bfloat16"
+                              if cfg.param_count() > 50e9 else "float32"))
+            step = S.make_train_step(cfg, opt_cfg,
+                                     moe_dispatch=moe_dispatch)
+            state = S.abstract_train_state(cfg, opt_cfg)
+            state_sh = S.train_state_shardings(cfg, mesh, opt_cfg, rules)
+            ins = S.input_specs(cfg, spec["seq_len"], spec["global_batch"],
+                                "train")
+            batch_sh = S.batch_shardings(ins["batch"], mesh, rules)
+            jitted = jax.jit(step,
+                             in_shardings=(state_sh, batch_sh),
+                             out_shardings=(state_sh, None),
+                             donate_argnums=(0,))
+            lowered = jitted.lower(state, ins["batch"])
+        elif step_kind == "prefill":
+            step = S.make_prefill_step(cfg, moe_dispatch=moe_dispatch)
+            params = S.M.abstract_params(cfg)
+            params_sh = S.param_shardings(cfg, mesh, rules)
+            ins = S.input_specs(cfg, spec["seq_len"], spec["global_batch"],
+                                "prefill")
+            batch_sh = S.batch_shardings(ins["batch"], mesh, rules)
+            jitted = jax.jit(step, in_shardings=(params_sh, batch_sh))
+            lowered = jitted.lower(params, ins["batch"])
+        else:  # decode
+            step = S.make_decode_step(cfg, long_ctx=long_ctx,
+                                      moe_dispatch=moe_dispatch)
+            params = S.M.abstract_params(cfg)
+            params_sh = S.param_shardings(cfg, mesh, rules)
+            ins = S.input_specs(cfg, spec["seq_len"], spec["global_batch"],
+                                "decode", long_ctx=long_ctx)
+            cache_sh = S.cache_shardings(cfg, mesh, spec["global_batch"],
+                                         spec["seq_len"], rules,
+                                         long_ctx=long_ctx)
+            tok_sh = S.NamedSharding(mesh, S.logical_to_pspec(
+                ins["tokens"].shape, ("batch", None), mesh, rules))
+            pos_sh = S.NamedSharding(mesh, S.logical_to_pspec(
+                ins["pos"].shape, ("batch",), mesh, rules))
+            jitted = jax.jit(step,
+                             in_shardings=(params_sh, cache_sh, tok_sh,
+                                           pos_sh),
+                             out_shardings=(None, cache_sh),
+                             donate_argnums=(1,))
+            lowered = jitted.lower(params, ins["cache"], ins["tokens"],
+                                   ins["pos"])
+        t_lower = time.time() - t0
+        t0 = time.time()
+        compiled = lowered.compile()
+        t_compile = time.time() - t0
+
+    mem = compiled.memory_analysis()
+    cost = compiled.cost_analysis()
+    hlo = compiled.as_text()
+    coll = collective_bytes(hlo)
+
+    # component-level measurement (scan bodies counted once by XLA's cost
+    # model, so totals come from per-superblock + head compiles x repeat)
+    if components:
+        with mesh_context(mesh, rules):
+            comp = measure_components(cfg, shape, mesh, rules, moe_dispatch)
+    else:
+        z = {"flops": 0.0, "bytes": 0.0, "coll": 0.0, "collectives": {}}
+        comp = {"layer": z, "head": z, "repeat": cfg.repeat,
+                "flops": float(cost.get("flops", 0.0)),
+                "bytes": float(cost.get("bytes accessed", 0.0)),
+                "coll": sum(v for k, v in coll.items() if k != "counts")}
+
+    chips = int(np.prod(mesh.devices.shape))
+    flops = comp["flops"]
+    bytes_acc = comp["bytes"]
+    coll_total = comp["coll"]
+
+    # model flops: 6ND for train (fwd+bwd), 2ND forward-only per token
+    n_active = cfg.param_count(active_only=True)
+    tokens = spec["global_batch"] * (spec["seq_len"]
+                                     if step_kind in ("train", "prefill")
+                                     else 1)
+    model_flops = (6 if step_kind == "train" else 2) * n_active * tokens
+
+    result = {
+        "arch": arch, "shape": shape,
+        "mesh": "multi(2,16,16)" if multi_pod else "single(16,16)",
+        "chips": chips, "step": step_kind,
+        "moe_dispatch": moe_dispatch,
+        "lower_s": round(t_lower, 1), "compile_s": round(t_compile, 1),
+        "memory": {
+            "bytes_per_device": int(getattr(mem, "temp_size_in_bytes", 0)
+                                    + getattr(mem, "argument_size_in_bytes", 0)
+                                    + getattr(mem, "output_size_in_bytes", 0)),
+            "temp_bytes": int(getattr(mem, "temp_size_in_bytes", 0)),
+            "arg_bytes": int(getattr(mem, "argument_size_in_bytes", 0)),
+            "out_bytes": int(getattr(mem, "output_size_in_bytes", 0)),
+            "peak_bytes": int(getattr(mem, "peak_memory_in_bytes", 0) or 0),
+        },
+        "hlo_flops": flops,
+        "hlo_bytes": bytes_acc,
+        "collective_bytes": coll_total,
+        "components": {
+            "layer": comp["layer"], "head": comp["head"],
+            "repeat": comp["repeat"],
+        },
+        "whole_program": {
+            "flops": float(cost.get("flops", 0.0)),
+            "bytes": float(cost.get("bytes accessed", 0.0)),
+            "collectives": coll,
+            "note": "scan bodies counted once by XLA cost model",
+        },
+        "model_flops": model_flops,
+        "roofline": {
+            # cost_analysis is per-partition (the compiled executable is
+            # one SPMD partition), i.e. already HLO_total/chips
+            "compute_s": flops / PEAK_FLOPS,
+            "memory_s": bytes_acc / HBM_BW,
+            "collective_s": coll_total / ICI_BW,
+        },
+    }
+    r = result["roofline"]
+    dom = max(r, key=r.get)
+    result["roofline"]["dominant"] = dom
+    # fraction of compiled compute that is "useful" model math
+    result["useful_flops_frac"] = (model_flops / (flops * chips)) \
+        if flops else 0.0
+
+    if save_dir:
+        os.makedirs(save_dir, exist_ok=True)
+        name = f"{arch}__{shape}__{'multi' if multi_pod else 'single'}"
+        if tag:
+            name += f"__{tag}"
+        with open(os.path.join(save_dir, name + ".json"), "w") as f:
+            json.dump(result, f, indent=1)
+    return result
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default=None)
+    ap.add_argument("--shape", default=None)
+    ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--moe-dispatch", default="gspmd")
+    ap.add_argument("--tag", default="")
+    ap.add_argument("--out", default="experiments/dryrun")
+    ap.add_argument("--no-components", action="store_true",
+                    help="skip per-component roofline compiles (multi-pod "
+                         "validation pass)")
+    ap.add_argument("--skip-existing", action="store_true")
+    args = ap.parse_args()
+
+    cells = []
+    if args.all:
+        run, _ = C.cells()
+        cells = run
+    else:
+        assert args.arch and args.shape
+        cells = [(args.arch, args.shape)]
+
+    for arch, shape in cells:
+        name = f"{arch}__{shape}__{'multi' if args.multi_pod else 'single'}"
+        if args.tag:
+            name += f"__{args.tag}"
+        path = os.path.join(args.out, name + ".json")
+        if args.skip_existing and os.path.exists(path):
+            print(f"[skip] {name}")
+            continue
+        try:
+            r = run_cell(arch, shape, multi_pod=args.multi_pod,
+                         moe_dispatch=args.moe_dispatch,
+                         save_dir=args.out, tag=args.tag,
+                         components=not args.no_components)
+            if "skipped" in r:
+                print(f"[skipped-by-rule] {name}: {r['skipped']}")
+                continue
+            mb = r["memory"]["bytes_per_device"] / 2**30
+            print(f"[ok] {name}: compile={r['compile_s']}s "
+                  f"mem/dev={mb:.2f}GiB dominant={r['roofline']['dominant']} "
+                  f"useful={r['useful_flops_frac']:.2f}")
+        except Exception as e:
+            print(f"[FAIL] {name}: {e}")
+            traceback.print_exc()
+
+
+if __name__ == "__main__":
+    main()

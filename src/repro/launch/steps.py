@@ -1,0 +1,161 @@
+"""Step factories: jit-able train/prefill/decode steps with shardings.
+
+`input_specs(cfg, shape)` returns ShapeDtypeStruct stand-ins for every
+model input of an (arch x shape) cell -- weak-type-correct, shardable, no
+device allocation -- plus the matching NamedShardings. The dry-run lowers
+and compiles against these; the real launchers feed concrete arrays of the
+same shapes.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.distributed.sharding import (ShardingRules, DEFAULT_RULES,
+                                        logical_to_pspec, mesh_context)
+from repro.models import model as M
+from repro.models.config import ModelConfig
+from repro.models.layers import ParamDecl
+from repro.optim import adamw
+from repro.optim.adamw import AdamWConfig
+
+
+# --------------------------------------------------------------------- #
+# shardings from declarations
+# --------------------------------------------------------------------- #
+def param_shardings(cfg: ModelConfig, mesh: Mesh,
+                    rules: ShardingRules = DEFAULT_RULES):
+    decls = M.param_decls(cfg)
+    return jax.tree_util.tree_map(
+        lambda d: NamedSharding(mesh, logical_to_pspec(
+            d.shape, d.logical_axes, mesh, rules)),
+        decls, is_leaf=lambda x: isinstance(x, ParamDecl))
+
+
+def opt_shardings(cfg: ModelConfig, mesh: Mesh, opt_cfg: AdamWConfig,
+                  rules: ShardingRules = DEFAULT_RULES):
+    ps = param_shardings(cfg, mesh, rules)
+    return {"mu": ps, "nu": ps,
+            "step": NamedSharding(mesh, P())}
+
+
+BATCH_AXES = {
+    "tokens": ("batch", "seq"),
+    "labels": ("batch", "seq"),
+    "frames": ("batch", "seq", None),
+}
+
+
+def batch_shardings(specs, mesh: Mesh,
+                    rules: ShardingRules = DEFAULT_RULES):
+    """NamedShardings for an input_specs 'batch' dict (real shapes, so
+    divisibility fallbacks resolve correctly)."""
+    return {
+        k: NamedSharding(mesh, logical_to_pspec(v.shape, BATCH_AXES[k],
+                                                mesh, rules))
+        for k, v in specs.items()
+    }
+
+
+def cache_shardings(cfg: ModelConfig, mesh: Mesh, batch: int, max_seq: int,
+                    rules: ShardingRules = DEFAULT_RULES,
+                    long_ctx: bool = False):
+    axes = M.cache_logical_axes(cfg, long_ctx=long_ctx)
+    abstract = M.abstract_cache(cfg, batch, max_seq, long_ctx=long_ctx)
+    return jax.tree_util.tree_map(
+        lambda a, ax: NamedSharding(mesh, logical_to_pspec(
+            a.shape, ax, mesh, rules)),
+        abstract, axes,
+        is_leaf=lambda x: isinstance(x, jax.ShapeDtypeStruct))
+
+
+# --------------------------------------------------------------------- #
+# abstract inputs per (arch x shape) cell
+# --------------------------------------------------------------------- #
+def input_specs(cfg: ModelConfig, seq_len: int, global_batch: int,
+                step: str, long_ctx: bool = False):
+    """ShapeDtypeStructs for one cell. For decode: (cache, tokens, pos)."""
+    i32 = jnp.int32
+    if step in ("train", "prefill"):
+        if cfg.frontend == "frames":
+            act = jnp.bfloat16 if cfg.activation_dtype == "bfloat16" \
+                else jnp.float32
+            batch = {
+                "frames": jax.ShapeDtypeStruct(
+                    (global_batch, seq_len, cfg.d_model), act),
+                "labels": jax.ShapeDtypeStruct((global_batch, seq_len),
+                                               i32),
+            }
+        else:
+            batch = {
+                "tokens": jax.ShapeDtypeStruct((global_batch, seq_len),
+                                               i32),
+                "labels": jax.ShapeDtypeStruct((global_batch, seq_len),
+                                               i32),
+            }
+        return {"batch": batch}
+    # decode: one new token against a seq_len-deep cache
+    return {
+        "cache": M.abstract_cache(cfg, global_batch, seq_len,
+                                  long_ctx=long_ctx),
+        "tokens": jax.ShapeDtypeStruct((global_batch, 1), i32),
+        "pos": jax.ShapeDtypeStruct((global_batch,), i32),
+    }
+
+
+# --------------------------------------------------------------------- #
+# steps
+# --------------------------------------------------------------------- #
+def make_train_step(cfg: ModelConfig, opt_cfg: AdamWConfig,
+                    impl: str = "auto", moe_dispatch: str = "gspmd",
+                    remat: bool = True, grad_compression=None):
+    """(state, batch) -> (state, metrics). state = {params, opt}."""
+
+    def train_step(state, batch):
+        def loss_fn(params):
+            return M.train_loss(params, batch, cfg, impl=impl,
+                                moe_dispatch=moe_dispatch, remat=remat)
+        loss, grads = jax.value_and_grad(loss_fn)(state["params"])
+        if grad_compression is not None:
+            grads, state_fb = grad_compression(grads,
+                                               state.get("feedback"))
+        params, opt, stats = adamw.adamw_update(
+            grads, state["opt"], state["params"], opt_cfg)
+        new_state = {"params": params, "opt": opt}
+        if grad_compression is not None:
+            new_state["feedback"] = state_fb
+        return new_state, {"loss": loss, **stats}
+
+    return train_step
+
+
+def make_prefill_step(cfg: ModelConfig, impl: str = "auto",
+                      moe_dispatch: str = "gspmd"):
+    def prefill_step(params, batch):
+        return M.prefill(params, batch, cfg, impl=impl,
+                         moe_dispatch=moe_dispatch)
+    return prefill_step
+
+
+def make_decode_step(cfg: ModelConfig, long_ctx: bool = False,
+                     moe_dispatch: str = "gspmd"):
+    def serve_step(params, cache, tokens, pos):
+        return M.decode_step(params, cache, tokens, pos, cfg,
+                             long_ctx=long_ctx, moe_dispatch=moe_dispatch)
+    return serve_step
+
+
+def abstract_train_state(cfg: ModelConfig, opt_cfg: AdamWConfig):
+    ap = M.abstract_params(cfg)
+    return {"params": ap, "opt": adamw.abstract_opt_state(ap, opt_cfg)}
+
+
+def train_state_shardings(cfg: ModelConfig, mesh: Mesh,
+                          opt_cfg: AdamWConfig,
+                          rules: ShardingRules = DEFAULT_RULES):
+    return {"params": param_shardings(cfg, mesh, rules),
+            "opt": opt_shardings(cfg, mesh, opt_cfg, rules)}

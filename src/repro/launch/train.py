@@ -1,0 +1,178 @@
+"""Training launcher: real end-to-end driver (also used by examples).
+
+Features required for large-scale runnability and exercised here at small
+scale: sharded+async checkpointing with atomic commit, exact resume
+(data batch = f(seed, step)), heartbeat watchdog, supervised restart
+(--supervise re-execs the loop subprocess on failure and picks up from the
+newest committed checkpoint), elastic mesh derivation, optional int8
+gradient compression with error feedback.
+
+Examples:
+  PYTHONPATH=src python -m repro.launch.train --arch qwen3_0_6b \
+      --preset tiny --steps 50 --mesh 1x1
+  PYTHONPATH=src python -m repro.launch.train --arch qwen3_0_6b \
+      --steps 200 --resume --supervise
+"""
+from __future__ import annotations
+
+import argparse
+import dataclasses
+import json
+import os
+import subprocess
+import sys
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro import configs as C
+from repro.checkpoint import CheckpointManager
+from repro.data import SyntheticTextDataset, make_batches
+from repro.distributed.compression import compress_grads, init_feedback
+from repro.distributed.health import HeartbeatMonitor, step_guard
+from repro.distributed.sharding import mesh_context, DEFAULT_RULES
+from repro.launch import mesh as mesh_lib
+from repro.launch import steps as S
+from repro.models import model as M
+from repro.optim.adamw import AdamWConfig
+
+
+def tiny_preset(cfg):
+    """~15M-param variant for CPU end-to-end runs (same family)."""
+    return dataclasses.replace(
+        C.get_smoke(cfg.name.split("-")[0].replace(".", "_")) if False
+        else cfg)
+
+
+def parse_mesh(arg: str):
+    if arg == "auto":
+        return mesh_lib.elastic_mesh()
+    dims = tuple(int(x) for x in arg.split("x"))
+    axes = ("data", "model")[:len(dims)] if len(dims) == 2 else \
+        (("data",) if len(dims) == 1 else ("pod", "data", "model"))
+    return mesh_lib.make_mesh(dims, axes)
+
+
+def train_loop(args) -> int:
+    if args.preset == "tiny":
+        cfg = C.get_smoke(args.arch)
+        cfg = dataclasses.replace(cfg, vocab_size=512)
+        seq, batch_size = args.seq, args.batch
+    else:
+        cfg = C.get(args.arch)
+        seq, batch_size = 4096, 256
+    opt_cfg = AdamWConfig(total_steps=args.steps, warmup_steps=args.steps // 10 + 1)
+    mesh = parse_mesh(args.mesh) if args.mesh != "none" else None
+
+    ds = SyntheticTextDataset(cfg.vocab_size, seq, batch_size,
+                              seed=args.data_seed)
+    ckpt = CheckpointManager(args.ckpt_dir, keep=3)
+
+    grad_comp = compress_grads if args.grad_compression else None
+    step_fn = S.make_train_step(cfg, opt_cfg, impl=args.attn_impl,
+                                moe_dispatch=args.moe_dispatch,
+                                grad_compression=grad_comp)
+
+    with mesh_context(mesh, DEFAULT_RULES):
+        start = 0
+        if args.resume and ckpt.latest_step() is not None:
+            abstract = S.abstract_train_state(cfg, opt_cfg)
+            if grad_comp is not None:
+                abstract["feedback"] = jax.tree_util.tree_map(
+                    lambda p: jax.ShapeDtypeStruct(p.shape, jnp.float32),
+                    abstract["params"])
+            shardings = (S.train_state_shardings(cfg, mesh, opt_cfg)
+                         if mesh is not None else None)
+            if shardings is not None and grad_comp is not None:
+                shardings["feedback"] = shardings["params"]
+            state, start, _ = ckpt.restore(abstract, shardings)
+            print(f"[train] resumed from step {start}")
+        else:
+            params = M.init_params(cfg, jax.random.PRNGKey(args.seed))
+            from repro.optim.adamw import init_opt_state
+            state = {"params": params,
+                     "opt": init_opt_state(params, opt_cfg)}
+            if grad_comp is not None:
+                state["feedback"] = init_feedback(params)
+
+        jit_step = jax.jit(step_fn, donate_argnums=(0,))
+        hb = HeartbeatMonitor(timeout_s=args.heartbeat_timeout).start()
+
+        t_last = time.time()
+        for step, batch in make_batches(ds, start, args.steps - start):
+            batch = {k: jnp.asarray(v) for k, v in batch.items()}
+
+            def run():
+                return jit_step(state, batch)
+            state, metrics = step_guard(run, step)
+            hb.beat()
+            if (step + 1) % args.log_every == 0:
+                loss = float(metrics["loss"])
+                dt = time.time() - t_last
+                t_last = time.time()
+                tps = args.log_every * batch_size * seq / dt
+                print(f"[train] step={step + 1} loss={loss:.4f} "
+                      f"lr={float(metrics['lr']):.2e} "
+                      f"gnorm={float(metrics['grad_norm']):.2f} "
+                      f"tok/s={tps:,.0f}", flush=True)
+            if (step + 1) % args.ckpt_every == 0 or step + 1 == args.steps:
+                ckpt.save(state, step + 1, blocking=False)
+        ckpt.wait()
+        hb.stop()
+        print("[train] done")
+    return 0
+
+
+def supervise(args) -> int:
+    """Restart-on-failure supervisor (the 1000-node control loop, scaled
+    down: the child is one SPMD job; on crash we re-exec with --resume)."""
+    attempts = 0
+    while attempts <= args.max_restarts:
+        child_args = [sys.executable, "-m", "repro.launch.train"] + [
+            a for a in sys.argv[1:] if a != "--supervise"]
+        if "--resume" not in child_args:
+            child_args.append("--resume")
+        print(f"[supervisor] launch attempt {attempts + 1}")
+        rc = subprocess.call(child_args)
+        if rc == 0:
+            return 0
+        attempts += 1
+        print(f"[supervisor] child failed rc={rc}; restarting from newest "
+              f"committed checkpoint")
+        time.sleep(args.restart_backoff_s)
+    print("[supervisor] giving up")
+    return 1
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="qwen3_0_6b")
+    ap.add_argument("--preset", default="tiny", choices=["tiny", "full"])
+    ap.add_argument("--steps", type=int, default=100)
+    ap.add_argument("--seq", type=int, default=128)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--mesh", default="none",
+                    help="'none', 'auto', or dims like 2x4")
+    ap.add_argument("--attn-impl", default="auto")
+    ap.add_argument("--moe-dispatch", default="gspmd")
+    ap.add_argument("--ckpt-dir", default="checkpoints/run")
+    ap.add_argument("--ckpt-every", type=int, default=50)
+    ap.add_argument("--log-every", type=int, default=10)
+    ap.add_argument("--resume", action="store_true")
+    ap.add_argument("--supervise", action="store_true")
+    ap.add_argument("--max-restarts", type=int, default=3)
+    ap.add_argument("--restart-backoff-s", type=float, default=1.0)
+    ap.add_argument("--heartbeat-timeout", type=float, default=600.0)
+    ap.add_argument("--grad-compression", action="store_true")
+    ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--data-seed", type=int, default=0)
+    args = ap.parse_args()
+    if args.supervise:
+        sys.exit(supervise(args))
+    sys.exit(train_loop(args))
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,3 @@
+from repro.models.config import ModelConfig, BlockSpec
+
+__all__ = ["ModelConfig", "BlockSpec"]

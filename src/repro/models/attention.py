@@ -1,0 +1,247 @@
+"""GQA attention: train/prefill (chunked online-softmax) + decode paths.
+
+Three implementations, one math:
+  * plain      -- einsum softmax; small sequences (smoke tests).
+  * lax-flash  -- python-unrolled query chunks x lax.scan'd KV chunks with
+                  online softmax. Memory O(chunk^2), and causal/window
+                  chunk skipping keeps HLO FLOPs at ~S^2/2 (resp. S*W):
+                  the XLA-level equivalent of flash attention, used for
+                  the multi-pod dry-run (Pallas cannot lower to the CPU
+                  stand-in backend) and as the CPU fallback.
+  * pallas     -- kernels/attention flash kernel on real TPUs (tests run
+                  it in interpret mode).
+Decode attends a single query over a (possibly seq-sharded) KV cache --
+reductions over the sharded axis become psums under GSPMD (flash-decoding
+layout, DESIGN.md Sec. 5).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.distributed.sharding import constrain
+from repro.models.config import ModelConfig
+from repro.models.layers import ParamDecl, rms_norm, rotary
+
+NEG_INF = -1e30
+
+
+def decls(cfg: ModelConfig) -> dict:
+    d, h, k, hd = cfg.d_model, cfg.num_heads, cfg.num_kv_heads, cfg.head_dim
+    out = {
+        "wq": ParamDecl((d, h, hd), ("embed", "heads", "head_dim")),
+        "wk": ParamDecl((d, k, hd), ("embed", "kv_heads", "head_dim")),
+        "wv": ParamDecl((d, k, hd), ("embed", "kv_heads", "head_dim")),
+        "wo": ParamDecl((h, hd, d), ("heads", "head_dim", "embed")),
+    }
+    if cfg.qk_norm:
+        out["q_norm"] = ParamDecl((hd,), (None,), init="zeros")
+        out["k_norm"] = ParamDecl((hd,), (None,), init="zeros")
+    return out
+
+
+def _mask_bias(q_pos, k_pos, causal: bool, window: int | None):
+    """(..., Q, K) additive bias from absolute positions."""
+    ok = jnp.ones(q_pos.shape[-1:] + k_pos.shape[-1:], dtype=bool)
+    if causal:
+        ok &= k_pos[None, :] <= q_pos[:, None]
+    if window is not None:
+        ok &= k_pos[None, :] > (q_pos[:, None] - window)
+    return jnp.where(ok, 0.0, NEG_INF)
+
+
+def _expand_kv(k, num_heads: int):
+    """GQA: expand kv heads to q heads by gather (k[:, :, h // g]).
+
+    NB: deliberately a gather on the head axis rather than a reshape of
+    the q head axis into (kh, g) -- a 16-way-sharded head axis cannot be
+    reshaped to (8, 2) without resharding, and the gather keeps everything
+    head-sharded (XLA fuses the broadcast into the einsum).
+    """
+    g = num_heads // k.shape[2]
+    if g == 1:
+        return k
+    return jnp.take(k, jnp.arange(num_heads) // g, axis=2)
+
+
+def _plain_attention(q, k, v, q_pos, k_pos, causal, window):
+    """q: (B,S,H,hd) k/v: (B,T,K,hd)."""
+    b, s, h, hd = q.shape
+    k = _expand_kv(k, h)
+    v = _expand_kv(v, h)
+    scores = jnp.einsum("bshd,bthd->bhst", q, k).astype(jnp.float32)
+    scores = scores / np.sqrt(hd) + _mask_bias(q_pos, k_pos, causal, window)
+    p = jax.nn.softmax(scores, axis=-1).astype(q.dtype)
+    out = jnp.einsum("bhst,bthd->bshd", p, v)
+    return out
+
+
+def _lax_flash(q, k, v, causal, window, chunk_q=1024, chunk_kv=1024,
+               unroll_kv: bool = False):
+    """Unrolled-q-chunk / scanned-kv-chunk online softmax.
+
+    Chunk skipping: for causal masks, q chunk i only visits kv chunks
+    [lo_i, i]; with a sliding window, lo_i = (i*cq - window) // ckv.
+    Each q chunk is checkpointed: its inner-scan softmax residuals are
+    recomputed in the backward pass instead of being saved (bounds live
+    memory to one chunk pair). `unroll_kv=True` unrolls the kv scan so
+    compiled.cost_analysis() counts every chunk (roofline measurement
+    mode; XLA's cost model counts loop bodies once).
+    """
+    b, s, h, hd = q.shape
+    t = k.shape[1]
+    k = _expand_kv(k, h)
+    v = _expand_kv(v, h)
+    cq = min(chunk_q, s)
+    ckv = min(chunk_kv, t)
+    assert s % cq == 0 and t % ckv == 0, (s, cq, t, ckv)
+    nq, nkv = s // cq, t // ckv
+    scale = 1.0 / np.sqrt(hd)
+
+    def make_q_chunk(i):
+        if causal:
+            hi = i + 1
+            lo = 0 if window is None else max(
+                0, (i * cq - (window + ckv - 1)) // ckv)
+        else:
+            lo, hi = 0, nkv
+        idxs = jnp.arange(lo, hi)
+
+        @jax.checkpoint
+        def q_chunk(q_i, q_pos, k, v):
+            def step(carry, j):
+                m, l, acc = carry
+                k_j = jax.lax.dynamic_slice_in_dim(k, j * ckv, ckv, axis=1)
+                v_j = jax.lax.dynamic_slice_in_dim(v, j * ckv, ckv, axis=1)
+                k_pos = j * ckv + jnp.arange(ckv)
+                sc = jnp.einsum("bqhd,bthd->bhqt", q_i, k_j)
+                sc = sc.astype(jnp.float32) * scale
+                sc = sc + _mask_bias(q_pos, k_pos, causal, window)
+                m_new = jnp.maximum(m, sc.max(axis=-1))
+                p = jnp.exp(sc - m_new[..., None])
+                corr = jnp.exp(m - m_new)
+                l_new = l * corr + p.sum(axis=-1)
+                acc_new = acc * corr[..., None] + jnp.einsum(
+                    "bhqt,bthd->bhqd", p.astype(v.dtype), v_j)
+                return (m_new, l_new, acc_new), None
+
+            m0 = jnp.full((b, h, cq), NEG_INF, jnp.float32)
+            l0 = jnp.zeros((b, h, cq), jnp.float32)
+            a0 = jnp.zeros((b, h, cq, hd), jnp.float32)
+            (m, l, acc), _ = jax.lax.scan(
+                step, (m0, l0, a0), idxs,
+                unroll=len(idxs) if unroll_kv else 1)
+            o = (acc / jnp.maximum(l, 1e-30)[..., None]).astype(q.dtype)
+            return o.transpose(0, 2, 1, 3)       # (b, cq, h, hd)
+
+        return q_chunk
+
+    outs = []
+    for i in range(nq):
+        q_i = q[:, i * cq:(i + 1) * cq]
+        q_pos = i * cq + jnp.arange(cq)
+        outs.append(make_q_chunk(i)(q_i, q_pos, k, v))
+    return jnp.concatenate(outs, axis=1)
+
+
+def attend(q, k, v, causal: bool, window: int | None, impl: str = "auto"):
+    """Full-sequence attention dispatch. q,k,v: (B,S,H/K,hd)."""
+    s = q.shape[1]
+    if impl == "auto":
+        impl = "lax_flash" if s > 1024 else "plain"
+    if impl == "plain":
+        pos = jnp.arange(s)
+        return _plain_attention(q, k, v, pos, pos, causal, window)
+    if impl == "lax_flash":
+        return _lax_flash(q, k, v, causal, window)
+    if impl == "lax_flash_unrolled":     # roofline measurement mode
+        return _lax_flash(q, k, v, causal, window, unroll_kv=True)
+    if impl in ("pallas", "pallas_interpret"):
+        from repro.kernels.attention.ops import flash_attention
+        return flash_attention(q, k, v, causal=causal, window=window,
+                               interpret=(impl == "pallas_interpret"))
+    raise ValueError(impl)
+
+
+# --------------------------------------------------------------------- #
+# layer entry points
+# --------------------------------------------------------------------- #
+def _project_qkv(p, x, cfg: ModelConfig, positions):
+    q = jnp.einsum("bsd,dhk->bshk", x, p["wq"])
+    k = jnp.einsum("bsd,dhk->bshk", x, p["wk"])
+    v = jnp.einsum("bsd,dhk->bshk", x, p["wv"])
+    if cfg.qk_norm:
+        q = rms_norm(q, p["q_norm"], cfg.rms_eps)
+        k = rms_norm(k, p["k_norm"], cfg.rms_eps)
+    q, k = rotary(q, k, positions, cfg.rope_theta)
+    return q, k, v
+
+
+def apply(p, x, cfg: ModelConfig, window: int | None, impl: str = "auto"):
+    """Training / prefill self-attention over the full sequence.
+
+    Returns (out, (k, v)) so prefill can keep the cache. Explicit SP
+    transition: one seq all-gather on entry (x arrives seq-sharded),
+    head-parallel compute, reduce-scatter back via the caller's residual
+    constraint.
+    """
+    b, s, _ = x.shape
+    x = constrain(x, "batch", None, None)
+    positions = jnp.broadcast_to(jnp.arange(s), (b, s))
+    q, k, v = _project_qkv(p, x, cfg, positions)
+    q = constrain(q, "batch", None, "act_heads", None)
+    k = constrain(k, "batch", None, "act_heads", None)
+    v = constrain(v, "batch", None, "act_heads", None)
+    o = attend(q, k, v, causal=cfg.causal, window=window, impl=impl)
+    o = constrain(o, "batch", None, "act_heads", None)
+    out = jnp.einsum("bshk,hkd->bsd", o, p["wo"])
+    return out, (k, v)
+
+
+def decode(p, x, cache_k, cache_v, pos, cfg: ModelConfig,
+           window: int | None, long_ctx: bool = False):
+    """Single-token decode. x: (B,1,d); cache: (B,T,K,hd); pos: (B,) int32.
+
+    Sliding-window layers use a RING cache of length T == window (slot =
+    pos % window), so a gemma3-style local layer holds O(window) state even
+    at 500k context. Global layers use T == max_seq. The cache's T axis is
+    sharded ('kv_seq' / 'long_kv_seq'); softmax reductions over it become
+    psums under GSPMD (flash-decoding layout).
+    """
+    b = x.shape[0]
+    t = cache_k.shape[1]
+    kv_ax = "long_kv_seq" if long_ctx else "kv_seq"
+    ring = window is not None and t == window
+    q, k_new, v_new = _project_qkv(p, x, cfg, pos[:, None])
+
+    slot = (pos % t) if ring else pos
+    onehot = jax.nn.one_hot(slot, t, dtype=cache_k.dtype)   # (B, T)
+    cache_k = cache_k * (1 - onehot[..., None, None]) \
+        + onehot[..., None, None] * k_new[:, :1]
+    cache_v = cache_v * (1 - onehot[..., None, None]) \
+        + onehot[..., None, None] * v_new[:, :1]
+    cache_k = constrain(cache_k, "batch", kv_ax, "kv_heads", None)
+    cache_v = constrain(cache_v, "batch", kv_ax, "kv_heads", None)
+
+    kh = cache_k.shape[2]
+    g = cfg.num_heads // kh
+    qr = q.reshape(b, kh, g, cfg.head_dim)
+    scores = jnp.einsum("bkgd,btkd->bkgt", qr, cache_k).astype(jnp.float32)
+    scores = scores / np.sqrt(cfg.head_dim)
+    slots = jnp.arange(t)
+    if ring:
+        # absolute position held by each ring slot; all are <= pos and
+        # > pos - window by construction, only warmup slots are invalid
+        abs_pos = pos[:, None] - ((pos[:, None] - slots[None, :]) % t)
+        ok = abs_pos >= 0
+    else:
+        ok = slots[None, :] <= pos[:, None]
+        if window is not None:
+            ok &= slots[None, :] > (pos[:, None] - window)
+    scores = jnp.where(ok[:, None, None, :], scores, NEG_INF)
+    pattn = jax.nn.softmax(scores, axis=-1).astype(x.dtype)
+    o = jnp.einsum("bkgt,btkd->bkgd", pattn, cache_v)
+    o = o.reshape(b, 1, cfg.num_heads, cfg.head_dim)
+    out = jnp.einsum("bshk,hkd->bsd", o, p["wo"])
+    return out, (cache_k, cache_v)

@@ -1,0 +1,125 @@
+"""Model configuration covering all assigned architecture families.
+
+A model is `embedding -> repeat x pattern(BlockSpec...) -> norm -> head`.
+The pattern (a short list of per-layer block descriptors) captures every
+assigned family: dense decoders are a 1-long pattern, gemma3 is a 6-long
+5:1 local:global pattern, jamba is an 8-long 1:7 attn:mamba pattern with
+alternating MoE, mamba2 is a 1-long SSM pattern, hubert is an encoder
+(bidirectional, no decode). The stack is scanned over `repeat` with the
+pattern's parameters stacked on the leading axis (O(1) HLO in depth).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Literal
+
+BlockKind = Literal["attn", "mamba"]
+
+
+@dataclasses.dataclass(frozen=True)
+class BlockSpec:
+    """One layer inside the repeating pattern."""
+    kind: BlockKind = "attn"
+    window: int | None = None    # sliding-window size (None = global)
+    moe: bool = False            # MoE FFN instead of dense FFN
+    has_ffn: bool = True         # mamba2 pure-SSM blocks have no FFN
+
+
+@dataclasses.dataclass(frozen=True)
+class ModelConfig:
+    name: str
+    family: str                  # dense | moe | hybrid | ssm | audio | vlm
+    num_layers: int
+    d_model: int
+    num_heads: int
+    num_kv_heads: int
+    head_dim: int
+    d_ff: int
+    vocab_size: int
+    pattern: tuple[BlockSpec, ...] = (BlockSpec(),)
+    # attention details
+    qk_norm: bool = False
+    rope_theta: float = 1e4
+    rms_eps: float = 1e-6
+    causal: bool = True          # False = encoder (hubert)
+    # MoE
+    num_experts: int = 0
+    top_k: int = 0
+    expert_d_ff: int = 0
+    capacity_factor: float = 1.25
+    # SSM (mamba2 / jamba)
+    ssm_state: int = 0
+    ssm_expand: int = 2
+    ssm_head_dim: int = 64
+    ssm_conv: int = 4
+    ssm_chunk: int = 256
+    # modality frontend: 'none' = token ids; 'frames' = precomputed
+    # embeddings (audio/vision stubs per the assignment)
+    frontend: str = "none"
+    tie_embeddings: bool = False
+    # numerics
+    param_dtype: str = "bfloat16"
+    activation_dtype: str = "bfloat16"
+
+    # ------------------------------------------------------------------ #
+    def __post_init__(self):
+        assert self.num_layers % len(self.pattern) == 0, (
+            f"{self.name}: num_layers {self.num_layers} must be a multiple "
+            f"of pattern length {len(self.pattern)}")
+
+    @property
+    def repeat(self) -> int:
+        return self.num_layers // len(self.pattern)
+
+    @property
+    def padded_vocab(self) -> int:
+        """Embedding/head tables pad the vocab to a multiple of 256 so the
+        vocab axis shards evenly (e.g. granite's 49155 -> 49408); labels
+        never reference the padding classes (DESIGN.md Sec. 8)."""
+        return -(-self.vocab_size // 256) * 256
+
+    @property
+    def ssm_d_inner(self) -> int:
+        return self.ssm_expand * self.d_model
+
+    @property
+    def ssm_heads(self) -> int:
+        return self.ssm_d_inner // self.ssm_head_dim
+
+    @property
+    def has_decode(self) -> bool:
+        return self.causal
+
+    def supports_long_context(self) -> bool:
+        """True if every pattern position is sub-quadratic-servable at 500k
+        (SSM, sliding-window); global-attention layers are allowed because
+        decode attends O(L) per step with a seq-sharded cache, but a config
+        of ONLY global full-attention layers is excluded per assignment."""
+        kinds = [(b.kind, b.window) for b in self.pattern]
+        return any(k == "mamba" or w is not None for k, w in kinds)
+
+    # rough parameter count (embedding + blocks), for 6ND model-flops
+    def param_count(self, active_only: bool = False) -> int:
+        d, f = self.d_model, self.d_ff
+        emb = self.vocab_size * d * (1 if self.tie_embeddings else 2)
+        total = emb
+        for b in self.pattern:
+            layer = 0
+            if b.kind == "attn":
+                q = d * self.num_heads * self.head_dim
+                kv = 2 * d * self.num_kv_heads * self.head_dim
+                o = self.num_heads * self.head_dim * d
+                layer += q + kv + o
+            else:
+                di, n = self.ssm_d_inner, self.ssm_state
+                layer += d * (2 * di + 2 * n + self.ssm_heads)  # in_proj
+                layer += di * d                                  # out_proj
+                layer += self.ssm_conv * (di + 2 * n)            # conv
+            if b.has_ffn:
+                if b.moe:
+                    e = self.num_experts if not active_only else self.top_k
+                    layer += e * 3 * d * self.expert_d_ff + d * self.num_experts
+                else:
+                    layer += 3 * d * f
+            total += layer * self.repeat
+        return total

@@ -1,0 +1,111 @@
+"""Shared layer primitives + the parameter declaration system.
+
+Parameters are declared once (shape + logical axes + init scale) via
+`ParamDecl`; the same declaration produces real arrays (`init_params`),
+abstract ShapeDtypeStructs for the dry-run, and NamedShardings for pjit
+in_shardings. One source of truth per tensor.
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.distributed.sharding import constrain
+
+
+@dataclasses.dataclass(frozen=True)
+class ParamDecl:
+    shape: tuple
+    logical_axes: tuple
+    init: str = "normal"          # normal | zeros | ones | embed
+    scale: float | None = None    # fan-in default when None
+
+
+def declare_dense(in_dim: int, out_dims: tuple, in_axis: str,
+                  out_axes: tuple) -> ParamDecl:
+    return ParamDecl(shape=(in_dim, *out_dims),
+                     logical_axes=(in_axis, *out_axes))
+
+
+def init_param(key, decl: ParamDecl, dtype) -> jnp.ndarray:
+    if decl.init == "zeros":
+        return jnp.zeros(decl.shape, dtype)
+    if decl.init == "ones":
+        return jnp.ones(decl.shape, dtype)
+    fan_in = decl.shape[0] if len(decl.shape) > 1 else decl.shape[0]
+    scale = decl.scale if decl.scale is not None else 1.0 / math.sqrt(fan_in)
+    if decl.init == "embed":
+        scale = 1.0
+    return (jax.random.normal(key, decl.shape, jnp.float32)
+            * scale).astype(dtype)
+
+
+def init_tree(key, decls, dtype):
+    """decls: nested dict of ParamDecl -> same-structure dict of arrays."""
+    flat, treedef = jax.tree_util.tree_flatten(
+        decls, is_leaf=lambda x: isinstance(x, ParamDecl))
+    keys = jax.random.split(key, len(flat))
+    vals = [init_param(k, d, dtype) for k, d in zip(keys, flat)]
+    return jax.tree_util.tree_unflatten(treedef, vals)
+
+
+def abstract_tree(decls, dtype):
+    return jax.tree_util.tree_map(
+        lambda d: jax.ShapeDtypeStruct(d.shape, dtype), decls,
+        is_leaf=lambda x: isinstance(x, ParamDecl))
+
+
+def stack_decls(decls, repeat: int):
+    """Stack a block's declarations along a leading 'layers' axis (scan)."""
+    return jax.tree_util.tree_map(
+        lambda d: ParamDecl(shape=(repeat, *d.shape),
+                            logical_axes=("layers", *d.logical_axes),
+                            init=d.init, scale=d.scale),
+        decls, is_leaf=lambda x: isinstance(x, ParamDecl))
+
+
+# --------------------------------------------------------------------- #
+# primitives
+# --------------------------------------------------------------------- #
+def rms_norm(x, gamma, eps: float):
+    dt = x.dtype
+    x = x.astype(jnp.float32)
+    var = jnp.mean(jnp.square(x), axis=-1, keepdims=True)
+    return ((x * jax.lax.rsqrt(var + eps)) * (1.0 + gamma.astype(
+        jnp.float32))).astype(dt)
+
+
+def rotary(q, k, positions, theta: float):
+    """Apply RoPE. q/k: (..., S, H, D); positions: (..., S)."""
+    d = q.shape[-1]
+    freqs = jnp.exp(
+        -jnp.arange(0, d, 2, dtype=jnp.float32) / d * jnp.log(theta))
+    ang = positions[..., :, None].astype(jnp.float32) * freqs  # (..., S, D/2)
+    cos, sin = jnp.cos(ang), jnp.sin(ang)
+    cos = cos[..., :, None, :]   # broadcast over heads
+    sin = sin[..., :, None, :]
+
+    def rot(x):
+        x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+        return jnp.concatenate(
+            [x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1)
+
+    return rot(q).astype(q.dtype), rot(k).astype(k.dtype)
+
+
+def swiglu(x, w_gate, w_in, w_out, act_axis: str = "act_mlp"):
+    """SwiGLU FFN with explicit sequence-parallel transitions: all-gather
+    the seq axis once on entry (x arrives seq-sharded from the residual
+    stream), run tensor-parallel over the ffn axis, and let the caller's
+    residual constraint reduce-scatter the output back to seq-sharded --
+    the Megatron SP pattern, stated explicitly so GSPMD never has to
+    arbitrate the seq-vs-ffn axis conflict per einsum."""
+    x = constrain(x, "batch", None, None)
+    h = jax.nn.silu(jnp.einsum("bsd,df->bsf", x, w_gate)) \
+        * jnp.einsum("bsd,df->bsf", x, w_in)
+    h = constrain(h, "batch", None, act_axis)
+    return jnp.einsum("bsf,fd->bsd", h, w_out)

@@ -1,0 +1,115 @@
+"""Mamba-2 (SSD) block: projections + causal depthwise conv + SSD + gate.
+
+Used by mamba2-370m (pure SSM stack) and jamba-1.5 (hybrid 7:1 with
+attention). Decode carries (conv_state, ssm_state) -- O(1) per token,
+which is what makes the long_500k cell servable (DESIGN.md Sec. 7).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.distributed.sharding import constrain
+from repro.models.config import ModelConfig
+from repro.models.layers import ParamDecl, rms_norm
+from repro.kernels.ssd.ops import ssd_chunked
+from repro.kernels.ssd.ref import ssd_step_ref
+
+
+def decls(cfg: ModelConfig) -> dict:
+    d, di = cfg.d_model, cfg.ssm_d_inner
+    n, h, k = cfg.ssm_state, cfg.ssm_heads, cfg.ssm_conv
+    return {
+        "wz": ParamDecl((d, di), ("embed", "ssm_inner")),
+        "wx": ParamDecl((d, di), ("embed", "ssm_inner")),
+        "wB": ParamDecl((d, n), ("embed", "state")),
+        "wC": ParamDecl((d, n), ("embed", "state")),
+        "wdt": ParamDecl((d, h), ("embed", "ssm_heads")),
+        "dt_bias": ParamDecl((h,), (None,), init="zeros"),
+        "A_log": ParamDecl((h,), (None,), init="zeros"),
+        "D": ParamDecl((h,), (None,), init="zeros"),
+        "conv_x": ParamDecl((k, di), ("conv", "ssm_inner"),
+                            init="normal", scale=0.5),
+        "conv_B": ParamDecl((k, n), ("conv", "state"),
+                            init="normal", scale=0.5),
+        "conv_C": ParamDecl((k, n), ("conv", "state"),
+                            init="normal", scale=0.5),
+        "gate_norm": ParamDecl((di,), (None,), init="zeros"),
+        "w_out": ParamDecl((di, d), ("ssm_inner", "embed")),
+    }
+
+
+def _causal_conv(x, w):
+    """Depthwise causal conv via shifted adds. x: (B,L,C); w: (K,C)."""
+    k = w.shape[0]
+    out = x * w[k - 1]
+    for i in range(1, k):
+        shifted = jnp.pad(x[:, :-i], ((0, 0), (i, 0), (0, 0)))
+        out = out + shifted * w[k - 1 - i]
+    return out
+
+
+def _conv_step(state, xt, w):
+    """One-token conv. state: (B,K-1,C) past inputs; xt: (B,C)."""
+    k = w.shape[0]
+    window = jnp.concatenate([state, xt[:, None]], axis=1)   # (B,K,C)
+    y = jnp.einsum("bkc,kc->bc", window, w)
+    return y, window[:, 1:]
+
+
+def apply(p, x, cfg: ModelConfig, impl: str = "auto"):
+    """Full-sequence SSD block. x: (B,L,d) -> (B,L,d)."""
+    z = jnp.einsum("bld,di->bli", x, p["wz"])
+    xc = jnp.einsum("bld,di->bli", x, p["wx"])
+    Bc = jnp.einsum("bld,dn->bln", x, p["wB"])
+    Cc = jnp.einsum("bld,dn->bln", x, p["wC"])
+    dt = jax.nn.softplus(
+        jnp.einsum("bld,dh->blh", x, p["wdt"]) + p["dt_bias"])
+    xc = jax.nn.silu(_causal_conv(xc, p["conv_x"]))
+    Bc = jax.nn.silu(_causal_conv(Bc, p["conv_B"]))
+    Cc = jax.nn.silu(_causal_conv(Cc, p["conv_C"]))
+    xc = constrain(xc, "batch", None, "act_heads")
+
+    b, l, di = xc.shape
+    xh = xc.reshape(b, l, cfg.ssm_heads, cfg.ssm_head_dim)
+    chunk = min(cfg.ssm_chunk, l)
+    y, _ = ssd_chunked(xh, dt, Bc, Cc, p["A_log"], p["D"],
+                       chunk=chunk, impl=impl)
+    y = y.reshape(b, l, di)
+    y = rms_norm(y * jax.nn.silu(z), p["gate_norm"], cfg.rms_eps)
+    return jnp.einsum("bli,id->bld", y, p["w_out"])
+
+
+def init_cache(cfg: ModelConfig, batch: int, dtype):
+    """(conv states for x/B/C, ssm state)."""
+    k, di, n = cfg.ssm_conv, cfg.ssm_d_inner, cfg.ssm_state
+    return {
+        "conv_x": jnp.zeros((batch, k - 1, di), dtype),
+        "conv_B": jnp.zeros((batch, k - 1, n), dtype),
+        "conv_C": jnp.zeros((batch, k - 1, n), dtype),
+        "ssm": jnp.zeros((batch, cfg.ssm_heads, n, cfg.ssm_head_dim),
+                         jnp.float32),
+    }
+
+
+def decode(p, x, cache, cfg: ModelConfig):
+    """One-token step. x: (B,1,d). Returns (out (B,1,d), new cache)."""
+    xt = x[:, 0]
+    z = jnp.einsum("bd,di->bi", xt, p["wz"])
+    xc = jnp.einsum("bd,di->bi", xt, p["wx"])
+    Bc = jnp.einsum("bd,dn->bn", xt, p["wB"])
+    Cc = jnp.einsum("bd,dn->bn", xt, p["wC"])
+    dt = jax.nn.softplus(jnp.einsum("bd,dh->bh", xt, p["wdt"])
+                         + p["dt_bias"])
+    xc, conv_x = _conv_step(cache["conv_x"], xc, p["conv_x"])
+    Bc, conv_B = _conv_step(cache["conv_B"], Bc, p["conv_B"])
+    Cc, conv_C = _conv_step(cache["conv_C"], Cc, p["conv_C"])
+    xc, Bc, Cc = jax.nn.silu(xc), jax.nn.silu(Bc), jax.nn.silu(Cc)
+
+    xh = xc.reshape(-1, cfg.ssm_heads, cfg.ssm_head_dim)
+    y, ssm = ssd_step_ref(xh, dt, Bc, Cc, p["A_log"], p["D"], cache["ssm"])
+    y = y.reshape(xt.shape[0], cfg.ssm_d_inner)
+    y = rms_norm(y * jax.nn.silu(z), p["gate_norm"], cfg.rms_eps)
+    out = jnp.einsum("bi,id->bd", y, p["w_out"])[:, None]
+    return out, {"conv_x": conv_x, "conv_B": conv_B, "conv_C": conv_C,
+                 "ssm": ssm}

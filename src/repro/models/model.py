@@ -1,0 +1,394 @@
+"""Full model assembly: embedding -> scan(pattern blocks) -> norm -> head.
+
+Design notes (DESIGN.md Sec. 5):
+  * scan-over-layers with stacked per-pattern params: HLO size is O(1) in
+    depth; full remat (`nothing_saveable`) keeps live activations to one
+    layer's residual stream.
+  * the residual stream is constrained ("batch", "seq", None): batch over
+    (pod, data), sequence parallelism over "model"; blocks internally
+    re-shard to head/mlp/expert parallelism.
+  * cross-entropy is computed in sequence chunks with vocab-sharded logits
+    (remat'd), so full (B, S, V) logits never materialize.
+  * decode keeps per-layer KV/SSM caches; sliding-window layers get ring
+    caches of length `window`.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.distributed.sharding import constrain
+from repro.models import attention, mamba, moe
+from repro.models.config import BlockSpec, ModelConfig
+from repro.models.layers import (ParamDecl, abstract_tree, init_tree,
+                                 rms_norm, stack_decls, swiglu)
+
+AUX_WEIGHT = 0.01     # load-balance loss weight
+
+
+def _dtype(name: str):
+    return {"float32": jnp.float32, "bfloat16": jnp.bfloat16,
+            "float16": jnp.float16}[name]
+
+
+# --------------------------------------------------------------------- #
+# parameter declarations
+# --------------------------------------------------------------------- #
+def _ffn_decls(cfg: ModelConfig) -> dict:
+    d, f = cfg.d_model, cfg.d_ff
+    return {
+        "w_gate": ParamDecl((d, f), ("embed", "mlp")),
+        "w_in": ParamDecl((d, f), ("embed", "mlp")),
+        "w_out": ParamDecl((f, d), ("mlp", "embed")),
+    }
+
+
+def _block_decls(cfg: ModelConfig, spec: BlockSpec) -> dict:
+    out = {"norm1": ParamDecl((cfg.d_model,), (None,), init="zeros")}
+    if spec.kind == "attn":
+        out["attn"] = attention.decls(cfg)
+    else:
+        out["mamba"] = mamba.decls(cfg)
+    if spec.has_ffn:
+        out["norm2"] = ParamDecl((cfg.d_model,), (None,), init="zeros")
+        out["ffn"] = moe.decls(cfg) if spec.moe else _ffn_decls(cfg)
+    return out
+
+
+def param_decls(cfg: ModelConfig) -> dict:
+    blocks = {
+        f"block{i}": stack_decls(_block_decls(cfg, spec), cfg.repeat)
+        for i, spec in enumerate(cfg.pattern)
+    }
+    out = {
+        "embed": ParamDecl((cfg.padded_vocab, cfg.d_model),
+                           ("vocab", "embed"), init="embed",
+                           scale=1.0),
+        "blocks": blocks,
+        "final_norm": ParamDecl((cfg.d_model,), (None,), init="zeros"),
+    }
+    if not cfg.tie_embeddings:
+        out["lm_head"] = ParamDecl((cfg.padded_vocab, cfg.d_model),
+                                   ("vocab", "embed"))
+    return out
+
+
+def init_params(cfg: ModelConfig, key):
+    return init_tree(key, param_decls(cfg), _dtype(cfg.param_dtype))
+
+
+def abstract_params(cfg: ModelConfig):
+    return abstract_tree(param_decls(cfg), _dtype(cfg.param_dtype))
+
+
+# --------------------------------------------------------------------- #
+# forward (train / prefill)
+# --------------------------------------------------------------------- #
+def _run_block(bp, x, cfg: ModelConfig, spec: BlockSpec, impl: str,
+               moe_dispatch: str, return_kv: bool = False):
+    h = rms_norm(x, bp["norm1"], cfg.rms_eps)
+    kv = None
+    if spec.kind == "attn":
+        a, kv = attention.apply(bp["attn"], h, cfg, spec.window, impl=impl)
+    else:
+        a = mamba.apply(bp["mamba"], h, cfg, impl=impl)
+    x = x + a
+    x = constrain(x, "batch", "seq", None)
+    aux = jnp.float32(0.0)
+    if spec.has_ffn:
+        h = rms_norm(x, bp["norm2"], cfg.rms_eps)
+        if spec.moe:
+            f, aux = moe.apply(bp["ffn"], h, cfg, dispatch=moe_dispatch)
+        else:
+            f = swiglu(h, bp["ffn"]["w_gate"], bp["ffn"]["w_in"],
+                       bp["ffn"]["w_out"])
+        x = x + f
+        x = constrain(x, "batch", "seq", None)
+    return (x, aux, kv) if return_kv else (x, aux)
+
+
+def backbone(params, x, cfg: ModelConfig, impl: str = "auto",
+             moe_dispatch: str = "gspmd", remat: bool = True):
+    """x: (B,S,d) embeddings -> (hidden (B,S,d), aux loss scalar).
+
+    Remat is per-BLOCK (not per-superblock): long patterns (gemma3's 6,
+    jamba's 8) would otherwise have every layer's recomputed internals
+    live simultaneously during the superblock backward; per-block
+    checkpoints bound the live set to one layer + the pattern's saved
+    residual inputs.
+    """
+    x = constrain(x, "batch", "seq", None)
+
+    def superblock(carry, layer_params):
+        x, aux = carry
+        for i, spec in enumerate(cfg.pattern):
+            blk = lambda bp, x, spec=spec: _run_block(
+                bp, x, cfg, spec, impl, moe_dispatch)
+            if remat:
+                blk = jax.checkpoint(
+                    blk, policy=jax.checkpoint_policies.nothing_saveable)
+            x, a = blk(layer_params[f"block{i}"], x)
+            aux = aux + a
+        return (x, aux), None
+
+    (x, aux), _ = jax.lax.scan(superblock, (x, jnp.float32(0.0)),
+                               params["blocks"])
+    x = rms_norm(x, params["final_norm"], cfg.rms_eps)
+    return x, aux
+
+
+def embed_inputs(params, batch, cfg: ModelConfig):
+    act = _dtype(cfg.activation_dtype)
+    if cfg.frontend == "frames":
+        return batch["frames"].astype(act)
+    emb = jnp.take(params["embed"], batch["tokens"], axis=0)
+    return (emb * np.sqrt(cfg.d_model)).astype(act)
+
+
+def _head_weights(params):
+    return params.get("lm_head", params["embed"])
+
+
+def ce_chunk_loss(w, h_c, y_c, cfg: ModelConfig):
+    """CE over one sequence chunk with vocab-sharded logits."""
+    logits = jnp.einsum("bsd,vd->bsv", h_c, w).astype(jnp.float32)
+    logits = constrain(logits, "batch", None, "act_vocab")
+    lse = jax.nn.logsumexp(logits, axis=-1)
+    onehot = (jnp.arange(cfg.padded_vocab)[None, None, :]
+              == y_c[:, :, None])
+    lbl = jnp.sum(jnp.where(onehot, logits, 0.0), axis=-1)
+    return jnp.sum(lse - lbl)
+
+
+def chunked_ce(params, hidden, labels, cfg: ModelConfig,
+               num_chunks: int = 8, scan: bool = True):
+    """Mean token cross-entropy in sequence chunks: full (B,S,V) logits
+    never materialize; each chunk is remat'd, and the chunk loop is a
+    lax.scan so XLA provably reuses one chunk's buffers (scan=False
+    unrolls for roofline measurement -- cost_analysis counts loop bodies
+    once)."""
+    b, s, _ = hidden.shape
+    num_chunks = min(num_chunks, s)
+    assert s % num_chunks == 0
+    cs = s // num_chunks
+    w = _head_weights(params)
+    chunk_loss = jax.checkpoint(
+        lambda h_c, y_c: ce_chunk_loss(w, h_c, y_c, cfg))
+
+    if scan:
+        def body(total, i):
+            h_c = jax.lax.dynamic_slice_in_dim(hidden, i * cs, cs, axis=1)
+            y_c = jax.lax.dynamic_slice_in_dim(labels, i * cs, cs, axis=1)
+            return total + chunk_loss(h_c, y_c), None
+        total, _ = jax.lax.scan(body, jnp.float32(0.0),
+                                jnp.arange(num_chunks))
+    else:
+        total = jnp.float32(0.0)
+        for i in range(num_chunks):
+            h_c = jax.lax.dynamic_slice_in_dim(hidden, i * cs, cs, axis=1)
+            y_c = jax.lax.dynamic_slice_in_dim(labels, i * cs, cs, axis=1)
+            total = total + chunk_loss(h_c, y_c)
+    return total / (b * s)
+
+
+def train_loss(params, batch, cfg: ModelConfig, impl: str = "auto",
+               moe_dispatch: str = "gspmd", remat: bool = True):
+    x = embed_inputs(params, batch, cfg)
+    hidden, aux = backbone(params, x, cfg, impl=impl,
+                           moe_dispatch=moe_dispatch, remat=remat)
+    ce = chunked_ce(params, hidden, batch["labels"], cfg)
+    return ce + AUX_WEIGHT * aux
+
+
+def prefill(params, batch, cfg: ModelConfig, impl: str = "auto",
+            moe_dispatch: str = "gspmd"):
+    """Forward pass returning last-position logits (inference prefill).
+
+    (Caches are produced by re-running decode for served requests; the
+    prefill *shape cell* measures the forward pass itself.)
+    """
+    x = embed_inputs(params, batch, cfg)
+    hidden, _ = backbone(params, x, cfg, impl=impl,
+                         moe_dispatch=moe_dispatch, remat=False)
+    last = hidden[:, -1:]
+    logits = jnp.einsum("bsd,vd->bsv", last,
+                        _head_weights(params)).astype(jnp.float32)
+    return constrain(logits, "batch", None, "act_vocab")
+
+
+# --------------------------------------------------------------------- #
+# component entry points (roofline measurement: XLA's cost model counts
+# scan bodies once, so the dry-run compiles one superblock / the head
+# separately and scales by `repeat` -- see launch/dryrun.py)
+# --------------------------------------------------------------------- #
+def superblock_decls(cfg: ModelConfig) -> dict:
+    """Unstacked declarations for one scan body (all pattern positions)."""
+    return {f"block{i}": _block_decls(cfg, spec)
+            for i, spec in enumerate(cfg.pattern)}
+
+
+def apply_superblock(layer_params, x, cfg: ModelConfig,
+                     impl: str = "lax_flash_unrolled",
+                     moe_dispatch: str = "gspmd", remat: bool = True):
+    """One scan-body application (forward). Returns (x, aux).
+    Mirrors backbone(): per-block remat."""
+    aux = jnp.float32(0.0)
+    for i, spec in enumerate(cfg.pattern):
+        blk = lambda bp, x, spec=spec: _run_block(
+            bp, x, cfg, spec, impl, moe_dispatch)
+        if remat:
+            blk = jax.checkpoint(
+                blk, policy=jax.checkpoint_policies.nothing_saveable)
+        x, a = blk(layer_params[f"block{i}"], x)
+        aux = aux + a
+    return x, aux
+
+
+def superblock_decode(layer_params, layer_cache, x, pos, cfg: ModelConfig,
+                      long_ctx: bool = False, moe_dispatch: str = "gspmd"):
+    """One decode scan-body application. Returns (x, new_cache)."""
+    from repro.models import attention as A
+    new_cache = {}
+    for i, spec in enumerate(cfg.pattern):
+        bp = layer_params[f"block{i}"]
+        c = layer_cache[f"block{i}"]
+        h = rms_norm(x, bp["norm1"], cfg.rms_eps)
+        if spec.kind == "attn":
+            a, (ck, cv) = A.decode(bp["attn"], h, c["k"], c["v"], pos, cfg,
+                                   spec.window, long_ctx=long_ctx)
+            new_cache[f"block{i}"] = {"k": ck, "v": cv}
+        else:
+            a, nc = mamba.decode(bp["mamba"], h, c, cfg)
+            new_cache[f"block{i}"] = nc
+        x = x + a
+        if spec.has_ffn:
+            h = rms_norm(x, bp["norm2"], cfg.rms_eps)
+            if spec.moe:
+                f, _ = moe.apply(bp["ffn"], h, cfg, dispatch=moe_dispatch)
+            else:
+                f = swiglu(h, bp["ffn"]["w_gate"], bp["ffn"]["w_in"],
+                           bp["ffn"]["w_out"])
+            x = x + f
+    return x, new_cache
+
+
+def head_loss(params, hidden, labels, cfg: ModelConfig,
+              scan_chunks: bool = True):
+    """Final norm + CE (the non-repeated tail of the train step)."""
+    h = rms_norm(hidden, params["final_norm"], cfg.rms_eps)
+    return chunked_ce(params, h, labels, cfg, scan=scan_chunks)
+
+
+# --------------------------------------------------------------------- #
+# decode
+# --------------------------------------------------------------------- #
+def cache_len(cfg: ModelConfig, spec: BlockSpec, max_seq: int) -> int:
+    if spec.window is not None:
+        return min(spec.window, max_seq)
+    return max_seq
+
+
+def abstract_cache(cfg: ModelConfig, batch: int, max_seq: int,
+                   long_ctx: bool = False):
+    """Cache structure as ShapeDtypeStructs -- NO allocation (a 500k-deep
+    cache is hundreds of GB; the dry-run must never materialize it)."""
+    act = _dtype(cfg.activation_dtype)
+    cache = {}
+    for i, spec in enumerate(cfg.pattern):
+        if spec.kind == "attn":
+            t = cache_len(cfg, spec, max_seq)
+            shape = (cfg.repeat, batch, t, cfg.num_kv_heads, cfg.head_dim)
+            cache[f"block{i}"] = {
+                "k": jax.ShapeDtypeStruct(shape, act),
+                "v": jax.ShapeDtypeStruct(shape, act),
+            }
+        else:
+            k, di, n = cfg.ssm_conv, cfg.ssm_d_inner, cfg.ssm_state
+            r = cfg.repeat
+            cache[f"block{i}"] = {
+                "conv_x": jax.ShapeDtypeStruct((r, batch, k - 1, di), act),
+                "conv_B": jax.ShapeDtypeStruct((r, batch, k - 1, n), act),
+                "conv_C": jax.ShapeDtypeStruct((r, batch, k - 1, n), act),
+                "ssm": jax.ShapeDtypeStruct(
+                    (r, batch, cfg.ssm_heads, n, cfg.ssm_head_dim),
+                    jnp.float32),
+            }
+    return cache
+
+
+def init_cache(cfg: ModelConfig, batch: int, max_seq: int,
+               long_ctx: bool = False):
+    """Concrete zero caches (serving); structure matches abstract_cache."""
+    return jax.tree_util.tree_map(
+        lambda a: jnp.zeros(a.shape, a.dtype),
+        abstract_cache(cfg, batch, max_seq, long_ctx),
+        is_leaf=lambda x: isinstance(x, jax.ShapeDtypeStruct))
+
+
+def cache_logical_axes(cfg: ModelConfig, long_ctx: bool = False):
+    """Logical axes pytree matching init_cache's structure."""
+    kv_ax = "long_kv_seq" if long_ctx else "kv_seq"
+    axes = {}
+    for i, spec in enumerate(cfg.pattern):
+        if spec.kind == "attn":
+            a = ("layers", "batch", kv_ax, "kv_heads", "head_dim")
+            axes[f"block{i}"] = {"k": a, "v": a}
+        else:
+            axes[f"block{i}"] = {
+                "conv_x": ("layers", "batch", None, "ssm_inner"),
+                "conv_B": ("layers", "batch", None, "state"),
+                "conv_C": ("layers", "batch", None, "state"),
+                "ssm": ("layers", "batch", "ssm_heads", "state", None),
+            }
+    return axes
+
+
+def decode_step(params, cache, tokens, pos, cfg: ModelConfig,
+                long_ctx: bool = False, moe_dispatch: str = "gspmd"):
+    """One serving step. tokens: (B,1) int32; pos: (B,) int32 positions.
+
+    Returns (logits (B,1,V) f32, new cache).
+    """
+    act = _dtype(cfg.activation_dtype)
+    if cfg.frontend == "frames":
+        raise ValueError("encoder models have no decode step")
+    x = (jnp.take(params["embed"], tokens, axis=0)
+         * np.sqrt(cfg.d_model)).astype(act)
+
+    def superblock(x, scanned):
+        layer_params, layer_cache = scanned
+        new_cache = {}
+        aux = jnp.float32(0.0)
+        for i, spec in enumerate(cfg.pattern):
+            bp = layer_params[f"block{i}"]
+            c = layer_cache[f"block{i}"]
+            h = rms_norm(x, bp["norm1"], cfg.rms_eps)
+            if spec.kind == "attn":
+                a, (ck, cv) = attention.decode(
+                    bp["attn"], h, c["k"], c["v"], pos, cfg, spec.window,
+                    long_ctx=long_ctx)
+                new_cache[f"block{i}"] = {"k": ck, "v": cv}
+            else:
+                a, nc = mamba.decode(bp["mamba"], h, c, cfg)
+                new_cache[f"block{i}"] = nc
+            x = x + a
+            if spec.has_ffn:
+                h = rms_norm(x, bp["norm2"], cfg.rms_eps)
+                if spec.moe:
+                    f, _ = moe.apply(bp["ffn"], h, cfg,
+                                     dispatch=moe_dispatch)
+                else:
+                    f = swiglu(h, bp["ffn"]["w_gate"], bp["ffn"]["w_in"],
+                               bp["ffn"]["w_out"])
+                x = x + f
+        return x, new_cache
+
+    x, new_cache = jax.lax.scan(superblock, x,
+                                (params["blocks"], cache))
+    x = rms_norm(x, params["final_norm"], cfg.rms_eps)
+    logits = jnp.einsum("bsd,vd->bsv", x,
+                        _head_weights(params)).astype(jnp.float32)
+    return constrain(logits, "batch", None, "act_vocab"), new_cache

@@ -1,0 +1,10 @@
+from repro.optim.adamw import (
+    AdamWConfig,
+    init_opt_state,
+    adamw_update,
+    cosine_schedule,
+    global_norm,
+)
+
+__all__ = ["AdamWConfig", "init_opt_state", "adamw_update",
+           "cosine_schedule", "global_norm"]

@@ -1,0 +1,8 @@
+import os
+import sys
+
+# tests must see the real (1-device) platform; the 512-device override is
+# dryrun.py-only. Some tests spawn subprocesses that set their own flags.
+os.environ.setdefault("JAX_PLATFORMS", "cpu")
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))

@@ -1,0 +1,91 @@
+"""Graph substrate: generators (Table 4 ranges), CSR invariants, oracles."""
+import numpy as np
+import pytest
+
+from repro.graphs import (Graph, make_dataset, make_road_network, make_tree,
+                          make_synthetic, reference)
+
+try:
+    from hypothesis import given, settings, strategies as st
+    HAVE_HYP = True
+except ImportError:
+    HAVE_HYP = False
+
+
+def test_table4_ranges():
+    for g in make_dataset("Tree", 5):
+        assert g.n == 256 and g.m == 255
+    for g in make_dataset("SRN", 5):
+        assert 64 <= g.n <= 107 and 146 <= g.m <= 278
+    for g in make_dataset("LRN", 5):
+        assert g.n == 256 and 584 <= g.m <= 898
+    for g in make_dataset("Syn", 5):
+        assert g.n == 256 and g.m == 768
+
+
+def test_road_network_connected():
+    for seed in range(5):
+        assert make_road_network(128, seed=seed).is_connected()
+
+
+def test_csr_roundtrip():
+    g = Graph.from_edges(4, [(0, 1), (1, 2), (2, 3), (0, 3)],
+                         [1.0, 2.0, 3.0, 4.0])
+    assert g.n == 4 and g.m == 4
+    assert list(g.neighbors(0)) == [1, 3]
+    assert g.edge_weights(0).tolist() == [1.0, 4.0]
+    rev = g.reverse()
+    assert list(rev.neighbors(1)) == [0]
+
+
+def test_undirected_half_edges():
+    g = Graph.from_edges(3, [(0, 1), (1, 2)], directed=False)
+    assert g.m == 4  # both half-edges stored
+
+
+def test_bfs_oracle_line_graph():
+    g = Graph.from_edges(4, [(0, 1), (1, 2), (2, 3)])
+    lv, _ = reference.bfs(g, 0)
+    assert lv.tolist() == [0, 1, 2, 3]
+
+
+def test_sssp_oracle_vs_bfs_unit_weights():
+    g = make_road_network(100, seed=3)
+    g_unit = Graph.from_edges(g.n, [(u, v) for u, v, _ in g.edge_list()],
+                              [1.0] * g.m)
+    d, _ = reference.sssp(g_unit, 0)
+    lv, _ = reference.bfs(g_unit, 0)
+    assert np.allclose(d, lv)
+
+
+def test_wcc_oracle_components():
+    # two disjoint triangles
+    g = Graph.from_edges(6, [(0, 1), (1, 2), (2, 0), (3, 4), (4, 5),
+                             (5, 3)])
+    lab, _ = reference.wcc(g)
+    assert lab.tolist() == [0, 0, 0, 3, 3, 3]
+
+
+def test_center_vertex_path_graph():
+    g = Graph.from_edges(5, [(i, i + 1) for i in range(4)], directed=False)
+    assert g.center_vertex() == 2
+
+
+if HAVE_HYP:
+    @given(st.integers(10, 80), st.integers(0, 10_000))
+    @settings(max_examples=20, deadline=None)
+    def test_generator_invariants(n, seed):
+        g = make_synthetic(n, min(2 * n, n * (n - 1) // 2), seed=seed)
+        assert g.indptr[0] == 0 and g.indptr[-1] == g.m
+        assert (np.diff(g.indptr) >= 0).all()
+        assert (g.indices >= 0).all() and (g.indices < g.n).all()
+        assert (g.weights >= 1).all()
+
+    @given(st.integers(16, 64), st.integers(0, 1000))
+    @settings(max_examples=15, deadline=None)
+    def test_sssp_triangle_inequality(n, seed):
+        g = make_road_network(n, seed=seed)
+        d, _ = reference.sssp(g, 0)
+        for u, v, w in g.edge_list():
+            if np.isfinite(d[u]):
+                assert d[v] <= d[u] + w + 1e-5

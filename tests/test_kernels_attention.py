@@ -1,0 +1,93 @@
+"""Flash attention Pallas kernel vs oracle: shape/dtype/mask sweeps."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.kernels.attention.ops import flash_attention
+from repro.kernels.attention.ref import attention_ref
+
+try:
+    from hypothesis import given, settings, strategies as st
+    HAVE_HYP = True
+except ImportError:
+    HAVE_HYP = False
+
+
+def _rand(shape, dtype, seed=0):
+    return jnp.asarray(
+        np.random.default_rng(seed).normal(size=shape), dtype)
+
+
+@pytest.mark.parametrize("causal", [True, False])
+@pytest.mark.parametrize("kh", [1, 2, 4])
+def test_flash_gqa_sweep(causal, kh):
+    B, S, H, hd = 2, 256, 4, 32
+    q = _rand((B, S, H, hd), jnp.float32, 1)
+    k = _rand((B, S, kh, hd), jnp.float32, 2)
+    v = _rand((B, S, kh, hd), jnp.float32, 3)
+    out = flash_attention(q, k, v, causal=causal, interpret=True,
+                          bq=128, bkv=128)
+    ref = attention_ref(q, k, v, causal=causal)
+    np.testing.assert_allclose(out, ref, atol=2e-5)
+
+
+@pytest.mark.parametrize("window", [32, 64, 128])
+def test_flash_sliding_window(window):
+    B, S, H, hd = 1, 256, 2, 64
+    q = _rand((B, S, H, hd), jnp.float32, 4)
+    k = _rand((B, S, H, hd), jnp.float32, 5)
+    v = _rand((B, S, H, hd), jnp.float32, 6)
+    out = flash_attention(q, k, v, causal=True, window=window,
+                          interpret=True, bq=64, bkv=64)
+    ref = attention_ref(q, k, v, causal=True, window=window)
+    np.testing.assert_allclose(out, ref, atol=2e-5)
+
+
+@pytest.mark.parametrize("dtype,atol", [(jnp.float32, 2e-5),
+                                        (jnp.bfloat16, 2e-2)])
+def test_flash_dtypes(dtype, atol):
+    B, S, H, hd = 1, 128, 2, 64
+    q, k, v = (_rand((B, S, H, hd), dtype, s) for s in (7, 8, 9))
+    out = flash_attention(q, k, v, causal=True, interpret=True,
+                          bq=64, bkv=64)
+    ref = attention_ref(q.astype(jnp.float32), k.astype(jnp.float32),
+                        v.astype(jnp.float32), causal=True)
+    np.testing.assert_allclose(out.astype(jnp.float32), ref, atol=atol)
+
+
+def test_flash_head_dims():
+    for hd in (16, 128, 256):
+        q, k, v = (_rand((1, 128, 2, hd), jnp.float32, s)
+                   for s in (10, 11, 12))
+        out = flash_attention(q, k, v, causal=True, interpret=True,
+                              bq=64, bkv=64)
+        ref = attention_ref(q, k, v, causal=True)
+        np.testing.assert_allclose(out, ref, atol=3e-5)
+
+
+def test_lax_flash_matches_plain_and_pallas():
+    from repro.models.attention import attend
+    q, k, v = (_rand((2, 512, 4, 32), jnp.float32, s) for s in (1, 2, 3))
+    k = k[:, :, :2]
+    v = v[:, :, :2]
+    o_plain = attend(q, k, v, True, None, impl="plain")
+    o_lax = attend(q, k, v, True, None, impl="lax_flash")
+    o_pl = attend(q, k, v, True, None, impl="pallas_interpret")
+    np.testing.assert_allclose(o_plain, o_lax, atol=2e-5)
+    np.testing.assert_allclose(o_plain, o_pl, atol=2e-5)
+
+
+if HAVE_HYP:
+    @given(st.sampled_from([64, 128]), st.sampled_from([1, 2]),
+           st.sampled_from([16, 32]), st.booleans(),
+           st.integers(0, 2**16))
+    @settings(max_examples=10, deadline=None)
+    def test_flash_property(s, kh, hd, causal, seed):
+        q = _rand((1, s, 2, hd), jnp.float32, seed)
+        k = _rand((1, s, kh, hd), jnp.float32, seed + 1)
+        v = _rand((1, s, kh, hd), jnp.float32, seed + 2)
+        out = flash_attention(q, k, v, causal=causal, interpret=True,
+                              bq=64, bkv=64)
+        ref = attention_ref(q, k, v, causal=causal)
+        np.testing.assert_allclose(out, ref, atol=3e-5)

@@ -1,0 +1,89 @@
+"""FLIP mapping compiler: Algorithm 1 & 2 invariants + quality."""
+import numpy as np
+import pytest
+
+from repro.core import (DEFAULT_ARCH, FlipArch, Mapping, RuntimeEstimator,
+                        SSSP, compile_mapping)
+from repro.graphs import make_road_network, make_synthetic, make_tree
+
+try:
+    from hypothesis import given, settings, strategies as st
+    HAVE_HYP = True
+except ImportError:
+    HAVE_HYP = False
+
+
+def test_mapping_validates():
+    g = make_road_network(128, seed=0)
+    m = compile_mapping(g, effort=0)
+    m.validate()
+    assert m.num_copies() == 1
+
+
+def test_capacity_respected_small_arch():
+    g = make_synthetic(64, 128, seed=1)
+    arch = FlipArch(width=4, height=4, pe_capacity=4)
+    m = compile_mapping(g, arch=arch, effort=0)
+    m.validate()       # 64 vertices exactly fill 4x4x4
+
+
+def test_replication_for_large_graphs():
+    g = make_road_network(600, seed=0)
+    m = compile_mapping(g, effort=0)
+    assert m.num_copies() == -(-600 // DEFAULT_ARCH.capacity)
+    m.validate()
+
+
+def test_local_opt_improves_routing_length():
+    g = make_road_network(256, seed=1)
+    m0 = compile_mapping(g, effort=0, seed=0)
+    m1 = compile_mapping(g, effort=1, seed=0)
+    assert m1.avg_routing_length() <= m0.avg_routing_length() + 1e-9
+
+
+def test_table8_quality_road_networks():
+    """Paper Table 8: avg routing length < ~1 for road networks."""
+    g = make_road_network(96, seed=2, delete_frac=0.70)
+    m = compile_mapping(g, effort=1, seed=0)
+    assert m.avg_routing_length() < 1.2
+
+
+def test_estimator_swap_benefit_antisymmetric_sign():
+    g = make_road_network(64, seed=0)
+    m = compile_mapping(g, effort=0)
+    est = RuntimeEstimator(DEFAULT_ARCH, g, SSSP)
+    u, v = 3, 40
+    c = est.swap_benefit(m, u, v)
+    # swapping back must undo the benefit
+    m.pe_of[u], m.pe_of[v] = m.pe_of[v], m.pe_of[u]
+    c_back = est.swap_benefit(m, u, v)
+    assert np.isclose(c, -c_back, atol=1e-6)
+
+
+def test_collision_sets_are_real():
+    g = make_synthetic(64, 256, seed=0)
+    m = compile_mapping(g, effort=0)
+    for (pe, src), vs in m.collision_sets().items():
+        assert len(vs) > 1
+        for v in vs:
+            assert m.pe_of[v] == pe
+            assert v in list(g.neighbors(src))
+
+
+def test_yx_route_length_matches_manhattan():
+    arch = DEFAULT_ARCH
+    for a in range(0, arch.num_pes, 7):
+        for b in range(0, arch.num_pes, 11):
+            assert len(arch.yx_route(a, b)) == arch.manhattan(a, b)
+
+
+if HAVE_HYP:
+    @given(st.integers(12, 60), st.integers(0, 500))
+    @settings(max_examples=10, deadline=None)
+    def test_mapping_total_and_capacity(n, seed):
+        g = make_synthetic(n, 2 * n, seed=seed)
+        arch = FlipArch(width=4, height=4, pe_capacity=4)
+        m = compile_mapping(g, arch=arch, effort=0, seed=seed)
+        m.validate()
+        assert len(np.unique(np.stack([m.pe_of, m.copy_of]), axis=1).T) <= \
+            arch.num_pes * m.num_copies()
