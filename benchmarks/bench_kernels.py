@@ -7,6 +7,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from benchmarks.common import emit, timed
+from repro.algebra import ALGEBRAS
 from repro.graphs import make_road_network
 from repro.kernels.frontier import build_blocks, frontier_relax
 from repro.models.attention import attend
@@ -14,17 +15,24 @@ from repro.kernels.ssd.ref import ssd_ref
 
 
 def run():
-    # frontier relax step (jnp path)
+    # frontier relax step (jnp path), one timing per registered algebra:
+    # future PRs read these rows to track the per-semiring perf trajectory
     g = make_road_network(1024, seed=0)
-    bg = build_blocks(g, "sssp", tile=128)
-    attrs = bg.to_tiled(np.random.default_rng(0)
-                        .uniform(0, 10, g.n).astype(np.float32))
-    sv = attrs
-    f = jax.jit(lambda s, a: frontier_relax(s, a, bg, mode="jnp"))
-    f(sv, attrs).block_until_ready()
-    _, us = timed(lambda: f(sv, attrs).block_until_ready(), repeats=20)
-    emit("kernel_frontier_relax_1k", us,
-         f"edges={g.m} blocks={bg.blocks.shape[0]}")
+    rng = np.random.default_rng(0)
+    for algo in sorted(ALGEBRAS):
+        bg = build_blocks(g, algo, tile=128)
+        alg = bg.algebra
+        vals = (alg.initial_attrs(g.n, 0) if alg.kind == "residual"
+                else rng.uniform(0, 10, g.n).astype(np.float32))
+        attrs = bg.to_tiled(vals)   # generic mid-run state
+        f = jax.jit(lambda s, a, bg=bg: frontier_relax(s, a, bg,
+                                                       mode="jnp"))
+        f(attrs, attrs).block_until_ready()
+        _, us = timed(lambda: f(attrs, attrs).block_until_ready(),
+                      repeats=20)
+        emit(f"kernel_frontier_relax_1k_{algo}", us,
+             f"semiring={alg.semiring.name} edges={g.m} "
+             f"blocks={bg.blocks.shape[0]}")
 
     # attention (lax_flash path)
     q = jnp.ones((1, 2048, 4, 64), jnp.float32)

@@ -1,0 +1,12 @@
+from repro.algebra.semiring import (MIN_PLUS, MAX_MIN, OR_AND, PLUS_TIMES,
+                                    SEMIRINGS, Semiring)
+from repro.algebra.programs import (ALGEBRAS, BFS, PAGERANK, REACH, SSSP,
+                                    WCC, WIDEST, VertexAlgebra, get_algebra,
+                                    register_algebra)
+
+__all__ = [
+    "Semiring", "SEMIRINGS",
+    "MIN_PLUS", "MAX_MIN", "OR_AND", "PLUS_TIMES",
+    "VertexAlgebra", "ALGEBRAS", "get_algebra", "register_algebra",
+    "BFS", "SSSP", "WCC", "WIDEST", "REACH", "PAGERANK",
+]

@@ -1,0 +1,212 @@
+"""Vertex algebras: a semiring plus everything an algorithm needs to run
+on every FLIP layer (cycle simulator, JAX engine, Pallas kernel, tables).
+
+A `VertexAlgebra` is the generalized vertex program (paper Fig. 5): the
+message along edge (u, v) is `attr_u ⊗ W[u, v]`, destinations merge with
+⊕, and a vertex scatters iff it became "active". Two activity kinds:
+
+  * monotone  -- attrs improve monotonically under an idempotent ⊕
+    (min/max/or); a vertex is active exactly when its attribute strictly
+    improved. BFS / SSSP / WCC / widest-path / reachability. These run
+    on the asynchronous cycle simulator too (`sim_ok=True`): idempotence
+    makes the fixpoint order-independent.
+  * residual  -- attrs are un-pushed residual mass over a non-idempotent
+    ⊕ (+,x); a vertex is active while its residual exceeds `tol`, and an
+    auxiliary per-vertex accumulator (the PageRank score) absorbs every
+    pushed residual. Delta-PageRank. Not expressible on the async
+    simulator (duplicated in-flight mass would double-count), so
+    `sim_ok=False`.
+
+Edge weights are materialized once at table/block build time via
+`edge_value` (the ⊗ operand), so every execution layer sees the same
+numbers: BFS stores 1 (hop), WCC stores the ⊗-identity (pure label
+copy), PageRank stores damping/outdeg(u).
+
+Registering a new algorithm == one `VertexAlgebra(...)` entry in
+`ALGEBRAS` plus a numpy oracle in `repro.graphs.reference` (see
+docs/ALGEBRA.md).
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.algebra.semiring import (MAX_MIN, MIN_PLUS, OR_AND, PLUS_TIMES,
+                                    Semiring)
+
+
+@dataclasses.dataclass(frozen=True, eq=False)
+class VertexAlgebra:
+    name: str
+    semiring: Semiring
+    kind: str = "monotone"       # 'monotone' | 'residual'
+    weight_rule: str = "graph"   # 'graph' | 'hop' | 'identity' | 'degree_damped'
+    undirected: bool = False     # scatter along both half-edges (WCC)
+    all_start: bool = False      # every vertex starts active (WCC, PageRank)
+    sim_ok: bool | None = None   # async-simulator expressibility; None =
+                                 # derive (idempotent ⊕ and monotone kind)
+    exe_update: int = 5          # instructions when the attribute changes
+    exe_noupdate: int = 4        # instructions when it does not
+    tol: float = 0.0             # residual activity threshold ('residual')
+    damping: float = 0.85        # PageRank damping ('degree_damped')
+    atol: float = 1e-6           # oracle-comparison tolerance
+
+    def __post_init__(self):
+        # The asynchronous simulator re-merges in-flight duplicates, which
+        # is only sound when ⊕ is idempotent and there is no side
+        # accumulator; sim_ok can opt out of that but never opt in.
+        sound = self.semiring.idempotent and self.kind == "monotone"
+        object.__setattr__(
+            self, "sim_ok",
+            sound if self.sim_ok is None else (self.sim_ok and sound))
+
+    # ------------------------------------------------------------------ #
+    # edge materialization (blocks, routing tables)
+    # ------------------------------------------------------------------ #
+    def edge_value(self, u: int, v: int, w: float,
+                   outdeg: np.ndarray) -> float:
+        """The ⊗ operand stored for edge (u, v) of raw weight w."""
+        if self.weight_rule == "graph":
+            return float(w)
+        if self.weight_rule == "hop":
+            return 1.0
+        if self.weight_rule == "identity":
+            return float(self.semiring.one)
+        if self.weight_rule == "degree_damped":
+            return self.damping / float(outdeg[u])
+        raise ValueError(f"unknown weight_rule {self.weight_rule!r}")
+
+    # ------------------------------------------------------------------ #
+    # initial state (original vertex order; engine re-tiles it)
+    # ------------------------------------------------------------------ #
+    def initial_attrs(self, n: int, src: int) -> np.ndarray:
+        sr = self.semiring
+        if self.kind == "residual":
+            # un-pushed residual of the series p = sum_k M^k b
+            return np.full(n, (1.0 - self.damping) / n, dtype=np.float32)
+        if self.all_start:           # WCC: label = own id
+            return np.arange(n, dtype=np.float32)
+        a = np.full(n, sr.zero, dtype=np.float32)
+        a[src] = np.float32(sr.one)
+        return a
+
+    def initial_frontier(self, n: int, src: int) -> np.ndarray:
+        if self.all_start or self.kind == "residual":
+            return np.ones(n, dtype=bool)
+        f = np.zeros(n, dtype=bool)
+        f[src] = True
+        return f
+
+    # ------------------------------------------------------------------ #
+    # simulator-side scalar ops (numpy)
+    # ------------------------------------------------------------------ #
+    @property
+    def source_value(self) -> float:
+        """Bootstrap packet value installed at the source vertex."""
+        return float(self.semiring.one)
+
+    def message(self, attr_u, w):
+        """Value carried by a packet along edge (u, v) with stored w."""
+        return self.semiring.mul_np(np.float32(attr_u), np.float32(w))
+
+    def merge(self, attr_v, msg):
+        return self.semiring.add_np(attr_v, msg)
+
+    def improved_np(self, new, old):
+        """Strict ⊕-improvement (direction-free: works for min and max)."""
+        return np.logical_and(self.semiring.add_np(new, old) == new,
+                              new != old)
+
+    def exe_cycles(self, updated: bool) -> int:
+        return self.exe_update if updated else self.exe_noupdate
+
+    # ------------------------------------------------------------------ #
+    # engine-side step hooks (jnp, traced under jit/shard_map)
+    # ------------------------------------------------------------------ #
+    def improved_jnp(self, new, old):
+        return jnp.logical_and(self.semiring.add_jnp(new, old) == new,
+                               new != old)
+
+    def scatter_carry_jnp(self, attrs, frontier, op_mode: bool):
+        """(src_vals, carry) for one relax step.
+
+        The kernel computes  new = carry ⊕ (⊕_u src_vals[u] ⊗ W[u, ·]);
+        monotone algebras carry their current attrs (merge folds "no
+        update" in), residual algebras carry only the *un-absorbed*
+        residual -- active lanes push theirs out, so they carry zero.
+        """
+        sr = self.semiring
+        if self.kind == "residual":
+            if op_mode:
+                return attrs, jnp.zeros_like(attrs)
+            sv = jnp.where(frontier, attrs, sr.zero)
+            return sv, jnp.where(frontier, sr.zero, attrs)
+        sv = attrs if op_mode else jnp.where(frontier, attrs, sr.zero)
+        return sv, attrs
+
+    def post_step_jnp(self, attrs, aux, src_vals, new_attrs):
+        """(attrs', aux', frontier') after a relax step."""
+        if self.kind == "residual":
+            return new_attrs, aux + src_vals, new_attrs > self.tol
+        return new_attrs, aux, self.improved_jnp(new_attrs, attrs)
+
+    def finalize(self, attrs, aux):
+        """Result vector reported to the caller."""
+        return aux if self.kind == "residual" else attrs
+
+    # ------------------------------------------------------------------ #
+    # result comparison (tests, CLI self-check, examples)
+    # ------------------------------------------------------------------ #
+    @staticmethod
+    def finite(x):
+        """Map ±inf to distinguishable sentinels: widest-path results
+        legitimately contain both +inf (source) and -inf (unreached)."""
+        return np.clip(np.nan_to_num(np.asarray(x, dtype=np.float64),
+                                     posinf=1e30, neginf=-1e30),
+                       -1e30, 1e30)
+
+    def results_match(self, got, ref) -> bool:
+        """Oracle comparison at this algebra's tolerance."""
+        return bool(np.allclose(self.finite(got), self.finite(ref),
+                                atol=self.atol))
+
+
+# ---------------------------------------------------------------------- #
+# registry
+# ---------------------------------------------------------------------- #
+BFS = VertexAlgebra("bfs", MIN_PLUS, weight_rule="hop",
+                    exe_update=5, exe_noupdate=4)
+SSSP = VertexAlgebra("sssp", MIN_PLUS, weight_rule="graph",
+                     exe_update=5, exe_noupdate=4)
+WCC = VertexAlgebra("wcc", MIN_PLUS, weight_rule="identity",
+                    undirected=True, all_start=True,
+                    exe_update=4, exe_noupdate=2)
+WIDEST = VertexAlgebra("widest", MAX_MIN, weight_rule="graph",
+                       exe_update=5, exe_noupdate=4)
+REACH = VertexAlgebra("reach", OR_AND, weight_rule="identity",
+                      exe_update=4, exe_noupdate=2)
+PAGERANK = VertexAlgebra("pagerank", PLUS_TIMES, kind="residual",
+                         weight_rule="degree_damped", all_start=True,
+                         exe_update=6, exe_noupdate=3,
+                         tol=1e-9, damping=0.85, atol=1e-4)
+
+ALGEBRAS: dict[str, VertexAlgebra] = {
+    a.name: a for a in (BFS, SSSP, WCC, WIDEST, REACH, PAGERANK)
+}
+
+
+def get_algebra(name: str) -> VertexAlgebra:
+    try:
+        return ALGEBRAS[name]
+    except KeyError:
+        raise ValueError(
+            f"unknown algorithm {name!r}; registered: "
+            f"{sorted(ALGEBRAS)}") from None
+
+
+def register_algebra(algebra: VertexAlgebra) -> VertexAlgebra:
+    """Add a new algorithm to every execution layer at once."""
+    ALGEBRAS[algebra.name] = algebra
+    return algebra

@@ -1,0 +1,103 @@
+"""Semirings underlying FLIP's vertex-centric execution.
+
+Every FLIP layer computes, per relaxation step, a blocked semiring
+matrix-vector product
+
+    cand[v] = ⊕_u ( src_vals[u] ⊗ W[u, v] )        (gather/combine)
+    new[v]  = carry[v] ⊕ cand[v]                    (merge)
+
+where W is the tiled adjacency with absent edges holding the ⊕-identity
+(`zero`), inactive sources also hold `zero`, and `carry` is whatever the
+algorithm folds into the merge (current attributes for monotone
+algorithms, the un-pushed residual for delta-PageRank). The semiring
+contract the kernels rely on:
+
+  * ⊕ is associative and commutative with identity `zero`;
+  * ⊗ has identity `one` and `zero` annihilates it: zero ⊗ x = zero,
+    so padding blocks / inactive lanes drop out of the reduction.
+
+Idempotent ⊕ (min/max/or) additionally makes the merge monotone, which is
+what the asynchronous cycle simulator needs (see `VertexAlgebra.sim_ok`).
+
+Each op comes in a numpy and a jnp flavour: the numpy side feeds the
+cycle simulator and the host-side oracles, the jnp side is traced into
+the Pallas kernel / jnp fallback / shard_map engine. Instances are
+module-level singletons so they hash by identity and are safe static
+arguments to `jax.jit`.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+@dataclasses.dataclass(frozen=True, eq=False)
+class Semiring:
+    """(⊕, ⊗) pair with identities and the reductions the kernels need.
+
+    `eq=False` keeps the default identity hash/eq, so passing a semiring
+    as a `static_argnames` entry to `jax.jit` caches one executable per
+    singleton instead of retracing.
+    """
+
+    name: str
+    zero: float                 # ⊕-identity; absent edge / inactive lane
+    one: float                  # ⊗-identity; source bootstrap value
+    add_np: Callable            # ⊕ elementwise, numpy
+    mul_np: Callable            # ⊗ elementwise, numpy
+    add_jnp: Callable           # ⊕ elementwise, jnp
+    mul_jnp: Callable           # ⊗ elementwise, jnp
+    add_reduce_jnp: Callable    # ⊕-reduction along an axis, jnp
+    segment_reduce_jnp: Callable  # ⊕-reduction by segment id, jnp
+    idempotent: bool            # x ⊕ x == x (min/max/or, not +)
+
+def _segment_or(x, seg, num_segments):
+    return jax.ops.segment_max(x, seg, num_segments=num_segments)
+
+
+MIN_PLUS = Semiring(
+    name="min_plus", zero=float("inf"), one=0.0,
+    add_np=np.minimum, mul_np=np.add,
+    add_jnp=jnp.minimum, mul_jnp=jnp.add,
+    add_reduce_jnp=jnp.min,
+    segment_reduce_jnp=lambda x, s, n: jax.ops.segment_min(
+        x, s, num_segments=n),
+    idempotent=True,
+)
+
+MAX_MIN = Semiring(
+    name="max_min", zero=float("-inf"), one=float("inf"),
+    add_np=np.maximum, mul_np=np.minimum,
+    add_jnp=jnp.maximum, mul_jnp=jnp.minimum,
+    add_reduce_jnp=jnp.max,
+    segment_reduce_jnp=lambda x, s, n: jax.ops.segment_max(
+        x, s, num_segments=n),
+    idempotent=True,
+)
+
+# boolean (or, and) carried in {0.0, 1.0} float32 so every layer keeps a
+# single dtype; max == or and min == and on that domain.
+OR_AND = Semiring(
+    name="or_and", zero=0.0, one=1.0,
+    add_np=np.maximum, mul_np=np.minimum,
+    add_jnp=jnp.maximum, mul_jnp=jnp.minimum,
+    add_reduce_jnp=jnp.max,
+    segment_reduce_jnp=_segment_or,
+    idempotent=True,
+)
+
+PLUS_TIMES = Semiring(
+    name="plus_times", zero=0.0, one=1.0,
+    add_np=np.add, mul_np=np.multiply,
+    add_jnp=jnp.add, mul_jnp=jnp.multiply,
+    add_reduce_jnp=jnp.sum,
+    segment_reduce_jnp=lambda x, s, n: jax.ops.segment_sum(
+        x, s, num_segments=n),
+    idempotent=False,
+)
+
+SEMIRINGS = {s.name: s for s in (MIN_PLUS, MAX_MIN, OR_AND, PLUS_TIMES)}

@@ -1,5 +1,7 @@
 from repro.core.arch import FlipArch, DEFAULT_ARCH
-from repro.core.vertex_program import BFS, SSSP, WCC, PROGRAMS, VertexProgram
+from repro.core.vertex_program import (BFS, SSSP, WCC, WIDEST, REACH,
+                                       PAGERANK, PROGRAMS, VertexProgram,
+                                       get_algebra, register_algebra)
 from repro.core.mapping import Mapping, RuntimeEstimator, compile_mapping
 from repro.core.tables import RoutingTables, build_tables, scatter_graph
 from repro.core.sim import SimResult, simulate
@@ -7,7 +9,8 @@ from repro.core import baselines
 
 __all__ = [
     "FlipArch", "DEFAULT_ARCH",
-    "BFS", "SSSP", "WCC", "PROGRAMS", "VertexProgram",
+    "BFS", "SSSP", "WCC", "WIDEST", "REACH", "PAGERANK",
+    "PROGRAMS", "VertexProgram", "get_algebra", "register_algebra",
     "Mapping", "RuntimeEstimator", "compile_mapping",
     "RoutingTables", "build_tables", "scatter_graph",
     "SimResult", "simulate", "baselines",

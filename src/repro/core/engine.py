@@ -4,12 +4,20 @@ Two execution modes, matching the paper's dual-mode fabric (Sec. 3.4):
 
   * data-centric  -- frontier-driven: each step relaxes only blocks with
     active sources (the Pallas kernel skips inactive tiles), and the new
-    frontier is the set of vertices whose attribute improved. This is
-    FLIP's packet-triggered execution, vectorized.
+    frontier is the set of vertices the algebra marks active (attribute
+    ⊕-improved for monotone algebras, residual above tolerance for
+    delta-PageRank). This is FLIP's packet-triggered execution,
+    vectorized.
   * op-centric    -- classic CGRA analogue: a full (unmasked) relaxation
-    sweep every step (Bellman-Ford style), no data-driven skipping.
+    sweep every step (Bellman-Ford / power-iteration style), no
+    data-driven skipping.
 
-Both run inside one `jax.lax.while_loop` fixpoint and can execute
+The algorithm is any registered `VertexAlgebra` (bfs, sssp, wcc,
+pagerank, widest, reach, ...): the engine itself only threads the
+algebra's scatter/carry/post-step hooks around the semiring relax kernel,
+so a new algebra runs here unchanged.
+
+Both modes run inside one `jax.lax.while_loop` fixpoint and can execute
 distributed via `shard_map`: destination tiles are partitioned over a mesh
 axis (devices = PE clusters), each device relaxes its local blocks, and the
 updated attribute vector is re-assembled with an all-gather -- the
@@ -26,12 +34,10 @@ import numpy as np
 from jax.sharding import Mesh, PartitionSpec as P
 from jax.experimental.shard_map import shard_map
 
+from repro.algebra import VertexAlgebra
 from repro.core.mapping import Mapping
-from repro.core.vertex_program import VertexProgram
 from repro.graphs.csr import Graph
 from repro.kernels.frontier.ops import BlockedGraph, build_blocks, frontier_relax
-
-INF = jnp.inf
 
 
 def mapping_order(mapping: Mapping) -> np.ndarray:
@@ -55,56 +61,56 @@ class FlipEngine:
 
     # -------------------------------------------------------------- #
     @staticmethod
-    def build(graph: Graph, algo: str, mapping: Mapping | None = None,
+    def build(graph: Graph, algo: str | VertexAlgebra,
+              mapping: Mapping | None = None,
               tile: int = 128, mode: str = "data",
               relax_mode: str = "auto") -> "FlipEngine":
         order = mapping_order(mapping) if mapping is not None else None
         bg = build_blocks(graph, algo=algo, tile=tile, order=order)
-        return FlipEngine(bg=bg, algo=algo, mode=mode, relax_mode=relax_mode)
+        return FlipEngine(bg=bg, algo=bg.algebra.name, mode=mode,
+                          relax_mode=relax_mode)
+
+    @property
+    def algebra(self) -> VertexAlgebra:
+        return self.bg.algebra
 
     # -------------------------------------------------------------- #
     def initial_state(self, src: int):
-        bg = self.bg
-        if self.algo == "wcc":
-            attrs = np.full(bg.padded_n, np.inf, dtype=np.float32)
-            attrs[bg.perm] = np.arange(bg.n, dtype=np.float32)
-            frontier = np.zeros(bg.padded_n, dtype=bool)
-            frontier[bg.perm] = True
-        else:
-            attrs = np.full(bg.padded_n, np.inf, dtype=np.float32)
-            attrs[bg.perm[src]] = 0.0
-            frontier = np.zeros(bg.padded_n, dtype=bool)
-            frontier[bg.perm[src]] = True
-        shape = (bg.ntiles, bg.tile)
-        return jnp.asarray(attrs.reshape(shape)), jnp.asarray(
-            frontier.reshape(shape))
+        """(attrs, aux, frontier) as (ntiles, T) arrays; padded lanes hold
+        the ⊕-identity so they never activate or contribute."""
+        bg, alg = self.bg, self.algebra
+        attrs = bg.to_tiled(alg.initial_attrs(bg.n, src))
+        aux = bg.to_tiled(np.zeros(bg.n, dtype=np.float32), fill=0.0)
+        frontier = np.zeros(bg.padded_n, dtype=bool)
+        frontier[bg.perm] = alg.initial_frontier(bg.n, src)
+        return attrs, aux, jnp.asarray(
+            frontier.reshape(bg.ntiles, bg.tile))
 
-    def _step(self, attrs, frontier):
-        if self.mode == "op":
-            src_vals = attrs                      # full sweep, no skipping
-        else:
-            src_vals = jnp.where(frontier, attrs, INF)
-        new = frontier_relax(src_vals, attrs, self.bg, mode=self.relax_mode)
-        return new, new < attrs
+    def _step(self, attrs, aux, frontier):
+        alg = self.algebra
+        sv, carry = alg.scatter_carry_jnp(attrs, frontier,
+                                          op_mode=(self.mode == "op"))
+        new = frontier_relax(sv, carry, self.bg, mode=self.relax_mode)
+        return alg.post_step_jnp(attrs, aux, sv, new)
 
     # -------------------------------------------------------------- #
     def run(self, src: int = 0):
-        """Single-device fixpoint; returns attrs in original vertex order
-        plus the number of relaxation steps taken."""
-        attrs0, frontier0 = self.initial_state(src)
+        """Single-device fixpoint; returns the algebra's result vector in
+        original vertex order plus the number of relaxation steps taken."""
+        attrs0, aux0, frontier0 = self.initial_state(src)
 
         def cond(state):
-            _, frontier, steps = state
+            _, _, frontier, steps = state
             return jnp.logical_and(frontier.any(), steps < self.max_steps)
 
         def body(state):
-            attrs, frontier, steps = state
-            new, nf = self._step(attrs, frontier)
-            return new, nf, steps + 1
+            attrs, aux, frontier, steps = state
+            attrs, aux, frontier = self._step(attrs, aux, frontier)
+            return attrs, aux, frontier, steps + 1
 
-        attrs, _, steps = jax.lax.while_loop(
-            cond, body, (attrs0, frontier0, jnp.int32(0)))
-        return self.bg.to_orig(attrs), int(steps)
+        attrs, aux, _, steps = jax.lax.while_loop(
+            cond, body, (attrs0, aux0, frontier0, jnp.int32(0)))
+        return self.bg.to_orig(self.algebra.finalize(attrs, aux)), int(steps)
 
     # -------------------------------------------------------------- #
     def run_distributed(self, src: int = 0, mesh: Mesh | None = None,
@@ -114,13 +120,16 @@ class FlipEngine:
         Each device owns a contiguous slab of destination tiles and the
         blocks that write them; per step it computes its slab's new attrs
         and the global attribute vector is re-formed with an all-gather
-        (the TPU analogue of FLIP's NoC scatter).
+        (the TPU analogue of FLIP's NoC scatter). Works for every
+        registered algebra in both 'data' and 'op' modes.
         """
         if mesh is None:
             devs = np.array(jax.devices())
             mesh = Mesh(devs, (axis,))
         ndev = mesh.shape[axis]
-        bg = self.bg
+        bg, alg = self.bg, self.algebra
+        sr = alg.semiring
+        zero = np.float32(sr.zero)
 
         # pad tiles to a multiple of ndev, then partition blocks by owner
         ntiles_p = -(-bg.ntiles // ndev) * ndev
@@ -131,7 +140,7 @@ class FlipEngine:
             per_dev_blocks[d // tiles_per_dev].append(i)
         max_nb = max(len(b) for b in per_dev_blocks)
         t = bg.tile
-        blocks_sh = np.zeros((ndev, max_nb, t, t), dtype=np.float32) + np.inf
+        blocks_sh = np.full((ndev, max_nb, t, t), zero, dtype=np.float32)
         bsrc_sh = np.zeros((ndev, max_nb), dtype=np.int32)
         bdst_sh = np.zeros((ndev, max_nb), dtype=np.int32)
         blocks_np = np.asarray(bg.blocks)
@@ -142,50 +151,55 @@ class FlipEngine:
                 # destination indices local to the device slab
                 bdst_sh[dev, j] = bdst[i] - dev * tiles_per_dev
             for j in range(len(idxs), max_nb):
-                # padding blocks: write slab-local tile 0 with +inf = no-op
+                # padding blocks: write slab-local tile 0 with all
+                # ⊕-identity entries = exact no-op
                 bsrc_sh[dev, j] = 0
                 bdst_sh[dev, j] = 0
 
-        attrs0, frontier0 = self.initial_state(src)
+        attrs0, aux0, frontier0 = self.initial_state(src)
         pad = ntiles_p - bg.ntiles
         if pad:
             attrs0 = jnp.pad(attrs0, ((0, pad), (0, 0)),
-                             constant_values=np.inf)
+                             constant_values=zero)
+            aux0 = jnp.pad(aux0, ((0, pad), (0, 0)))
             frontier0 = jnp.pad(frontier0, ((0, pad), (0, 0)))
+        op_mode = self.mode == "op"
 
         @functools.partial(
             shard_map, mesh=mesh,
-            in_specs=(P(axis), P(axis), P(axis), P(None), P(None)),
-            out_specs=P(None),
+            in_specs=(P(axis), P(axis), P(axis), P(None), P(None), P(None)),
+            out_specs=(P(None), P(None)),
             check_rep=False)
-        def dist_fix(blocks, bsrc_l, bdst_l, attrs, frontier):
+        def dist_fix(blocks, bsrc_l, bdst_l, attrs, aux, frontier):
             blocks, bsrc_l, bdst_l = blocks[0], bsrc_l[0], bdst_l[0]
 
             def cond(state):
-                _, frontier, steps = state
+                _, _, frontier, steps = state
                 return jnp.logical_and(frontier.any(),
                                        steps < self.max_steps)
 
             def body(state):
-                attrs, frontier, steps = state
-                src_vals = attrs if self.mode == "op" else jnp.where(
-                    frontier, attrs, INF)
-                local_attrs = jax.lax.dynamic_slice_in_dim(
-                    attrs, jax.lax.axis_index(axis) * tiles_per_dev,
+                attrs, aux, frontier, steps = state
+                sv, carry = alg.scatter_carry_jnp(attrs, frontier, op_mode)
+                carry_local = jax.lax.dynamic_slice_in_dim(
+                    carry, jax.lax.axis_index(axis) * tiles_per_dev,
                     tiles_per_dev, axis=0)
-                sv = src_vals[bsrc_l]                          # (nb, T)
-                cand = jnp.min(sv[:, :, None] + blocks, axis=1)
-                best = jax.ops.segment_min(cand, bdst_l,
-                                           num_segments=tiles_per_dev)
-                new_local = jnp.minimum(local_attrs, best)
+                svb = sv[bsrc_l]                               # (nb, T)
+                cand = sr.add_reduce_jnp(
+                    sr.mul_jnp(svb[:, :, None], blocks), axis=1)
+                best = sr.segment_reduce_jnp(cand, bdst_l, tiles_per_dev)
+                new_local = sr.add_jnp(carry_local, best)
                 new = jax.lax.all_gather(new_local, axis, tiled=True)
-                return new, new < attrs, steps + 1
+                attrs, aux, frontier = alg.post_step_jnp(attrs, aux, sv, new)
+                return attrs, aux, frontier, steps + 1
 
-            attrs_f, _, steps = jax.lax.while_loop(
-                cond, body, (attrs, frontier, jnp.int32(0)))
-            return attrs_f
+            attrs_f, aux_f, _, _ = jax.lax.while_loop(
+                cond, body, (attrs, aux, frontier, jnp.int32(0)))
+            return attrs_f, aux_f
 
         blocks_sh = jnp.asarray(blocks_sh)
-        out = jax.jit(dist_fix)(blocks_sh, jnp.asarray(bsrc_sh),
-                                jnp.asarray(bdst_sh), attrs0, frontier0)
+        attrs_f, aux_f = jax.jit(dist_fix)(
+            blocks_sh, jnp.asarray(bsrc_sh), jnp.asarray(bdst_sh),
+            attrs0, aux0, frontier0)
+        out = self.algebra.finalize(attrs_f, aux_f)
         return self.bg.to_orig(out[:bg.ntiles])

@@ -25,7 +25,7 @@ import numpy as np
 from repro.core.arch import FlipArch
 from repro.core.mapping import Mapping
 from repro.core.tables import RoutingTables, build_tables
-from repro.core.vertex_program import VertexProgram, INF
+from repro.core.vertex_program import VertexProgram
 
 
 @dataclasses.dataclass
@@ -62,7 +62,7 @@ class _PE:
     __slots__ = ("inq", "aluin", "aluout", "busy_until", "pending_scatter",
                  "cur_task")
 
-    def __init__(self, depth: int):
+    def __init__(self):
         # input queues: one per port (4 directions); modeled as a single
         # arbiter-fed pool of per-port FIFOs
         self.inq = {d: deque() for d in ("N", "S", "E", "W", "L")}
@@ -98,19 +98,20 @@ def simulate(mapping: Mapping, program: VertexProgram,
              src: int = 0,
              tables: RoutingTables | None = None,
              max_cycles: int = 5_000_000) -> SimResult:
+    if not program.sim_ok:
+        raise ValueError(
+            f"program {program.name!r} is not expressible on the "
+            "asynchronous cycle simulator (non-idempotent merge); run it "
+            "on the JAX engine instead")
     arch = mapping.arch
     g = mapping.graph
     tables = tables or build_tables(mapping, program)
 
-    # NB: attrs start "empty" (INF / own label); the bootstrap task below
-    # performs the first update-and-scatter, so the source's attribute is
-    # installed by execution, not pre-set (otherwise the first merge would
-    # see no change and never scatter).
-    if program.all_start:
-        attrs = np.arange(g.n, dtype=np.float32)
-    else:
-        attrs = np.full(g.n, INF, dtype=np.float32)
-    pes = [_PE(arch.input_buffer_depth) for _ in range(arch.num_pes)]
+    # NB: the bootstrap tasks below (src_v < 0) always scatter, so the
+    # source's first update propagates even though its attribute is
+    # pre-set by initial_attrs (a regular merge would see no change).
+    attrs = program.initial_attrs(g.n, src).copy()
+    pes = [_PE() for _ in range(arch.num_pes)]
     # intra-table fast lookup of a vertex's (copy, pe)
     pe_of, copy_of = mapping.pe_of, mapping.copy_of
     num_clusters = (arch.width // arch.cluster) * (arch.height // arch.cluster)
@@ -140,7 +141,7 @@ def simulate(mapping: Mapping, program: VertexProgram,
     else:
         src_cluster = arch.cluster_of(int(pe_of[src]))
         loaded[src_cluster] = int(copy_of[src])
-        pes[int(pe_of[src])].aluin.append((src, 0.0, -1, 0))
+        pes[int(pe_of[src])].aluin.append((src, program.source_value, -1, 0))
 
     in_flight: list[tuple[int, Packet]] = []   # (arrive_cycle, pkt)
     cycle = 0
@@ -265,13 +266,13 @@ def simulate(mapping: Mapping, program: VertexProgram,
                 v, value, src_v, w = pe.cur_task
                 pe.cur_task = None
                 if src_v < 0:
-                    attrs[v] = min(attrs[v], np.float32(value))
+                    attrs[v] = program.merge(attrs[v], np.float32(value))
                     for e in tables.inter_entries(int(copy_of[v]), p, v):
                         pe.pending_scatter.append((e, float(attrs[v])))
                 else:
                     msg = program.message(np.float32(value), np.float32(w))
                     relaxed += 1
-                    if msg < attrs[v]:
+                    if bool(program.improved_np(msg, attrs[v])):
                         attrs[v] = msg
                         for e in tables.inter_entries(int(copy_of[v]), p, v):
                             pe.pending_scatter.append((e, float(attrs[v])))
@@ -281,7 +282,7 @@ def simulate(mapping: Mapping, program: VertexProgram,
                 # decided by a peek at the merge result
                 msg = program.message(np.float32(value), np.float32(w)) \
                     if src_v >= 0 else np.float32(value)
-                updated = src_v < 0 or bool(msg < attrs[v])
+                updated = src_v < 0 or bool(program.improved_np(msg, attrs[v]))
                 cost = arch.t_tab + program.exe_cycles(updated)
                 pe.busy_until = cycle + cost - 1
                 pe.cur_task = (v, value, src_v, w)
@@ -290,8 +291,6 @@ def simulate(mapping: Mapping, program: VertexProgram,
 
         # ---------------- runtime data swapping ------------------------ #
         for c in range(num_clusters):
-            if cluster_swap_until[c] == cycle - 1 >= 0:
-                pass
             if cluster_swap_until[c] >= cycle:
                 continue
             pend = {s: q for s, q in membuf[c].items() if q}

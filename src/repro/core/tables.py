@@ -7,8 +7,13 @@ One entry per (u, destination PE); entries are sorted by descending route
 length so the longest (likely critical-path) packet is issued first.
 
 Intra-Table (per PE): for each incoming edge (u -> v) with v stored locally,
-the DRF register of v and the edge weight, hashed by src id (src % 8) into
-short linked lists (avg search < 2 cycles -> arch.t_tab).
+the DRF register of v and the edge's ⊗ operand, hashed by src id (src % 8)
+into short linked lists (avg search < 2 cycles -> arch.t_tab).
+
+Stored weights are materialized through the program's algebra
+(`edge_value`): BFS stores the hop constant 1, WCC the ⊗-identity,
+SSSP/widest the raw graph weight -- so the simulator's
+`message = attr ⊗ weight` needs no per-algorithm branching.
 """
 from __future__ import annotations
 
@@ -65,6 +70,7 @@ class RoutingTables:
 def build_tables(mapping: Mapping, program: VertexProgram,
                  farthest_first: bool = True) -> RoutingTables:
     g = scatter_graph(mapping.graph, program)
+    outdeg = g.out_degree()
     reg = mapping.register_index()
     inter: dict = {}
     intra: dict = {}
@@ -74,7 +80,7 @@ def build_tables(mapping: Mapping, program: VertexProgram,
         by_pe: dict[tuple[int, int], list[tuple[int, float]]] = {}
         for k in range(g.indptr[u], g.indptr[u + 1]):
             v = int(g.indices[k])
-            w = float(g.weights[k])
+            w = program.edge_value(u, v, float(g.weights[k]), outdeg)
             v_key = (mapping.slice_of(v), int(mapping.pe_of[v]))
             by_pe.setdefault(v_key, []).append((v, w))
             intra.setdefault(v_key, {}).setdefault(u, []).append(

@@ -1,69 +1,44 @@
 """Vertex-centric programs (paper Fig. 5 and Sec. 5.1).
 
-A vertex program is an (Apply, Scatter) pair over a commutative, idempotent
-"merge" semiring: an incoming message carrying the source vertex's attribute
-is combined with the edge weight, merged into the destination attribute, and
-scattered onward iff the attribute changed. BFS / SSSP / WCC are all
-instances of the tropical (min, +) family:
+A vertex program is an (Apply, Scatter) pair over a semiring: an incoming
+message carrying the source vertex's attribute is ⊗-combined with the
+edge weight, ⊕-merged into the destination attribute, and scattered
+onward iff the attribute became active. Since PR "Semiring algebra
+subsystem", the program *is* a `repro.algebra.VertexAlgebra` -- this
+module re-exports the registry so the cycle simulator, routing tables and
+mapping compiler keep their historical import surface.
 
-  BFS : message = attr_u + 1        merge = min     (unit weights)
-  SSSP: message = attr_u + w(u,v)   merge = min
-  WCC : message = attr_u            merge = min     (label propagation,
+The classic tropical (min, +) family:
+
+  BFS : message = attr_u ⊗ 1        ⊕ = min     (hop weights)
+  SSSP: message = attr_u ⊗ w(u,v)   ⊕ = min
+  WCC : message = attr_u ⊗ 0        ⊕ = min     (label propagation,
         undirected edges, all vertices initially active with attr = id)
+
+plus the non-tropical algebras: widest-path (max, min), reachability
+(or, and) and delta-PageRank (+, x; engine-only, `sim_ok=False`).
 
 Instruction counts per paper Sec. 5.1: 4/5/5 (WCC/BFS/SSSP) when the
 attribute updates, 2/4/4 when it does not.
 """
 from __future__ import annotations
 
-import dataclasses
 import numpy as np
+
+from repro.algebra import (ALGEBRAS, BFS, PAGERANK, REACH, SSSP, WCC,
+                           WIDEST, VertexAlgebra, get_algebra,
+                           register_algebra)
+
+# The vertex program *is* the algebra; the alias keeps old call sites
+# (simulator, tables, mapping compiler) and type hints working.
+VertexProgram = VertexAlgebra
 
 INF = np.float32(np.inf)
 
+PROGRAMS = ALGEBRAS
 
-@dataclasses.dataclass(frozen=True)
-class VertexProgram:
-    name: str
-    exe_update: int        # instructions when the vertex attribute changes
-    exe_noupdate: int      # instructions when it does not
-    uses_weights: bool     # message adds the edge weight
-    add_one: bool          # message adds a constant 1 (BFS levels)
-    all_start: bool        # every vertex starts active (WCC)
-    undirected: bool       # scatter along both edge directions
-
-    # -------------------------------------------------------------- #
-    def initial_attrs(self, n: int, src: int) -> np.ndarray:
-        if self.all_start:          # WCC: label = own id
-            return np.arange(n, dtype=np.float32)
-        a = np.full(n, INF, dtype=np.float32)
-        a[src] = 0.0
-        return a
-
-    def message(self, attr_u: np.ndarray, w: np.ndarray):
-        """Value carried by a packet along edge (u, v) with weight w."""
-        if self.uses_weights:
-            return attr_u + w
-        if self.add_one:
-            return attr_u + 1.0
-        return attr_u
-
-    @staticmethod
-    def merge(attr_v, msg):
-        return np.minimum(attr_v, msg)
-
-    def exe_cycles(self, updated: bool) -> int:
-        return self.exe_update if updated else self.exe_noupdate
-
-
-BFS = VertexProgram("bfs", exe_update=5, exe_noupdate=4,
-                    uses_weights=False, add_one=True,
-                    all_start=False, undirected=False)
-SSSP = VertexProgram("sssp", exe_update=5, exe_noupdate=4,
-                     uses_weights=True, add_one=False,
-                     all_start=False, undirected=False)
-WCC = VertexProgram("wcc", exe_update=4, exe_noupdate=2,
-                    uses_weights=False, add_one=False,
-                    all_start=True, undirected=True)
-
-PROGRAMS = {"bfs": BFS, "sssp": SSSP, "wcc": WCC}
+__all__ = [
+    "VertexProgram", "VertexAlgebra", "PROGRAMS", "INF",
+    "BFS", "SSSP", "WCC", "WIDEST", "REACH", "PAGERANK",
+    "get_algebra", "register_algebra",
+]

@@ -3,6 +3,7 @@ from repro.graphs.generators import (
     make_road_network,
     make_tree,
     make_synthetic,
+    make_power_law,
     make_dataset,
     DATASET_SPECS,
 )
@@ -13,6 +14,7 @@ __all__ = [
     "make_road_network",
     "make_tree",
     "make_synthetic",
+    "make_power_law",
     "make_dataset",
     "DATASET_SPECS",
     "reference",

@@ -100,6 +100,36 @@ def make_tree(n: int = 256, seed: int = 0, max_children: int = 4,
     return Graph.from_edges(n, edges, weights, directed=True)
 
 
+def make_power_law(n: int = 128, m: int = 384, seed: int = 0,
+                   exponent: float = 2.5, max_weight: int = 8) -> Graph:
+    """Chung-Lu style directed power-law graph (hub-dominated degrees).
+
+    Endpoint i is drawn with probability ~ (i+1)^(-1/(exponent-1)) under a
+    random vertex relabeling, giving an expected degree sequence with tail
+    exponent ~`exponent`. A spanning arborescence from vertex 0 keeps the
+    graph reachable, like `make_synthetic`.
+    """
+    rng = np.random.default_rng(seed)
+    w = (np.arange(1, n + 1, dtype=np.float64)) ** (-1.0 / (exponent - 1.0))
+    w = rng.permutation(w)
+    p = w / w.sum()
+    edges = set()
+    perm = rng.permutation(n)
+    order = [0] + [int(v) for v in perm if v != 0]
+    for i in range(1, n):
+        edges.add((order[int(rng.integers(0, i))], order[i]))
+    tries = 0
+    while len(edges) < m and tries < 50 * m:
+        u = int(rng.choice(n, p=p))
+        v = int(rng.choice(n, p=p))
+        tries += 1
+        if u != v:
+            edges.add((u, v))
+    weights = rng.integers(1, max_weight + 1,
+                           size=len(edges)).astype(np.float32)
+    return Graph.from_edges(n, sorted(edges), weights, directed=True)
+
+
 def make_synthetic(n: int = 256, m: int = 768, seed: int = 0,
                    max_weight: int = 8) -> Graph:
     """Low-diameter random directed graph: m distinct random edges."""

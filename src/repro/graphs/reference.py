@@ -84,6 +84,84 @@ def wcc(g: Graph):
     return label, {"edges_relaxed": edges_relaxed}
 
 
+def pagerank(g: Graph, damping: float = 0.85, tol: float = 1e-12,
+             max_iters: int = 10_000):
+    """PageRank without dangling-mass redistribution: the fixpoint of
+
+        p = (1-d)/n + d * sum_{u -> v} p[u] / outdeg(u)
+
+    solved by Jacobi iteration in float64 (the power series sum_k M^k b,
+    which is exactly what the engine's delta-push accumulates).
+    Returns (rank f32 (n,), stats).
+    """
+    n = g.n
+    deg = g.out_degree().astype(np.float64)
+    b = (1.0 - damping) / n
+    p = np.zeros(n, dtype=np.float64)
+    iters = 0
+    edges_relaxed = 0
+    for iters in range(1, max_iters + 1):
+        contrib = np.where(deg > 0, p / np.maximum(deg, 1), 0.0)
+        new = np.full(n, b)
+        for u in range(n):
+            lo, hi = g.indptr[u], g.indptr[u + 1]
+            if contrib[u]:
+                new[g.indices[lo:hi]] += damping * contrib[u]
+            edges_relaxed += hi - lo
+        delta = np.abs(new - p).max()
+        p = new
+        if delta < tol:
+            break
+    return p.astype(np.float32), {"edges_relaxed": edges_relaxed,
+                                  "iterations": iters}
+
+
+def widest(g: Graph, src: int):
+    """Widest (maximum-bottleneck) path via max-heap Dijkstra.
+
+    width(src) = +inf; unreachable vertices stay -inf.
+    Returns (width f32 (n,), stats).
+    """
+    width = np.full(g.n, -np.inf, dtype=np.float32)
+    width[src] = np.inf
+    heap = [(-np.inf, src)]           # max-heap via negated widths
+    edges_relaxed = 0
+    pops = 0
+    while heap:
+        negw, u = heapq.heappop(heap)
+        pops += 1
+        if -negw < width[u]:
+            continue
+        for k in range(g.indptr[u], g.indptr[u + 1]):
+            v = int(g.indices[k])
+            w = float(g.weights[k])
+            edges_relaxed += 1
+            cand = min(float(width[u]), w)
+            if cand > width[v]:
+                width[v] = np.float32(cand)
+                heapq.heappush(heap, (-cand, v))
+    return width, {"edges_relaxed": edges_relaxed, "heap_pops": pops}
+
+
+def reach(g: Graph, src: int):
+    """Directed reachability from src as {0.0, 1.0} floats.
+    Returns (reachable f32 (n,), stats)."""
+    seen = np.zeros(g.n, dtype=bool)
+    seen[src] = True
+    frontier = [src]
+    edges_relaxed = 0
+    while frontier:
+        nxt = []
+        for u in frontier:
+            for v in g.neighbors(u):
+                edges_relaxed += 1
+                if not seen[v]:
+                    seen[v] = True
+                    nxt.append(int(v))
+        frontier = nxt
+    return seen.astype(np.float32), {"edges_relaxed": edges_relaxed}
+
+
 def run(algo: str, g: Graph, src: int = 0):
     if algo == "bfs":
         return bfs(g, src)
@@ -91,4 +169,10 @@ def run(algo: str, g: Graph, src: int = 0):
         return sssp(g, src)
     if algo == "wcc":
         return wcc(g)
+    if algo == "pagerank":
+        return pagerank(g)
+    if algo == "widest":
+        return widest(g, src)
+    if algo == "reach":
+        return reach(g, src)
     raise ValueError(f"unknown algorithm {algo!r}")

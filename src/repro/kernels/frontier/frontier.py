@@ -1,17 +1,25 @@
-"""Pallas TPU kernel: frontier-masked tropical (min,+) relaxation.
+"""Pallas TPU kernel: frontier-masked semiring relaxation.
 
 TPU-native form of FLIP's data-centric PE array (DESIGN.md Sec. 2): graph
 vertices are tiled onto the 8x128 VPU lane grid; one grid step relaxes all
 edges between a source tile and a destination tile held as a dense weight
-block in VMEM (absent edge = +inf). The frontier bitmask plays FLIP's
-packet-trigger role: a block whose source tile has no active vertex is
-skipped entirely (`pl.when`), so inactive regions cost (almost) nothing --
-the kernel preserves the paper's "only active vertices scatter" property.
+block in VMEM (absent edge = the semiring's ⊕-identity). One kernel body
+serves every registered algebra: the merge ⊕, combine ⊗, and reduction
+are closed over as static ops, so each (semiring, tile) pair specializes
+to its own executable at trace time -- tropical (min,+) for BFS/SSSP/WCC,
+(max,min) for widest-path, (or,and) for reachability, (+,x) for
+delta-PageRank.
+
+The frontier bitmask plays FLIP's packet-trigger role: a block whose
+source tile holds only ⊕-identity lanes is skipped entirely (`pl.when`),
+so inactive regions cost (almost) nothing -- the kernel preserves the
+paper's "only active vertices scatter" property. Because the ⊕-identity
+annihilates ⊗, skipping such a block is exact, not approximate.
 
 Block-sparsity replaces the Inter-/Intra-Tables: `bsrc/bdst` (scalar-
 prefetched, so index maps can read them) name the tile pair of each block;
 position inside the block is the DRF register. Blocks are sorted by
-destination tile so a destination's partial min accumulates in VMEM across
+destination tile so a destination's partial ⊕ accumulates in VMEM across
 consecutive grid steps (revisit-friendly "arbitrary" dimension semantics).
 
 Layout: tile size T is a multiple of 128 (lane width). VMEM working set
@@ -28,52 +36,63 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
-INF = float("inf")   # python literal: safe to close over inside the kernel
+from repro.algebra import MIN_PLUS, Semiring
 
 
-def _relax_kernel(bsrc_ref, bdst_ref, src_vals_ref, attrs_dst_ref,
-                  block_ref, out_ref):
-    i = pl.program_id(0)
-    prev = bdst_ref[jnp.maximum(i - 1, 0)]
-    is_first = jnp.logical_or(i == 0, bdst_ref[i] != prev)
+@functools.lru_cache(maxsize=None)
+def _make_relax_kernel(semiring: Semiring):
+    """Specialize the kernel body for one algebra (cached per semiring)."""
+    zero = float(semiring.zero)        # python literal: safe to close over
+    add, mul = semiring.add_jnp, semiring.mul_jnp
+    add_reduce = semiring.add_reduce_jnp
 
-    # First visit of this destination tile: seed with current attributes
-    # (the merge is min, so seeding with attrs folds "no update" in).
-    @pl.when(is_first)
-    def _init():
-        out_ref[...] = attrs_dst_ref[...]
+    def _relax_kernel(bsrc_ref, bdst_ref, src_vals_ref, carry_ref,
+                      block_ref, out_ref):
+        i = pl.program_id(0)
+        prev = bdst_ref[jnp.maximum(i - 1, 0)]
+        is_first = jnp.logical_or(i == 0, bdst_ref[i] != prev)
 
-    src_vals = src_vals_ref[...]          # (1, T) -- +inf where inactive
-    # FLIP trigger rule: skip the whole block if no source is active.
-    @pl.when(jnp.any(src_vals < INF))
-    def _relax():
-        w = block_ref[0]                   # (T, T): w[s, d]
-        cand = jnp.min(src_vals[0][:, None] + w, axis=0)   # (T,)
-        out_ref[...] = jnp.minimum(out_ref[...], cand[None, :])
+        # First visit of this destination tile: seed with the carry values
+        # (current attrs for monotone algebras -- the ⊕-merge folds "no
+        # update" in; the un-absorbed residual for delta-PageRank).
+        @pl.when(is_first)
+        def _init():
+            out_ref[...] = carry_ref[...]
+
+        src_vals = src_vals_ref[...]   # (1, T) -- ⊕-identity where inactive
+        # FLIP trigger rule: skip the whole block if no source is active.
+        @pl.when(jnp.any(src_vals != zero))
+        def _relax():
+            w = block_ref[0]           # (T, T): w[s, d]
+            cand = add_reduce(mul(src_vals[0][:, None], w), axis=0)  # (T,)
+            out_ref[...] = add(out_ref[...], cand[None, :])
+
+    return _relax_kernel
 
 
-@functools.partial(jax.jit, static_argnames=("interpret",))
+@functools.partial(jax.jit, static_argnames=("semiring", "interpret"))
 def frontier_relax_pallas(src_vals: jnp.ndarray,    # (ntiles, T) f32
-                          attrs: jnp.ndarray,       # (ntiles, T) f32
+                          carry: jnp.ndarray,       # (ntiles, T) f32
                           blocks: jnp.ndarray,      # (nb, T, T) f32
                           bsrc: jnp.ndarray,        # (nb,) i32, sorted by
                           bdst: jnp.ndarray,        # (nb,) i32  (bdst, bsrc)
+                          semiring: Semiring = MIN_PLUS,
                           interpret: bool = False) -> jnp.ndarray:
-    """One relaxation step. Returns new_attrs (ntiles, T).
+    """One relaxation step: new[d] = carry[d] ⊕ (⊕_s sv[s] ⊗ W[s, d]).
 
-    Destination tiles with no incident block keep their attrs (callers
+    Destination tiles with no incident block keep their carry (callers
     ensure every tile has at least one block, or accept identity via the
     input_output_aliasing below).
     """
     nb, t, _ = blocks.shape
-    ntiles = attrs.shape[0]
+    ntiles = carry.shape[0]
 
     grid_spec = pltpu.PrefetchScalarGridSpec(
         num_scalar_prefetch=2,
         grid=(nb,),
         in_specs=[
             pl.BlockSpec((1, t), lambda i, bs, bd: (bs[i], 0)),   # src vals
-            pl.BlockSpec((1, t), lambda i, bs, bd: (bd[i], 0)),   # dst attrs
+            pl.BlockSpec((1, t), lambda i, bs, bd: (bd[i], 0)),   # carry
             pl.BlockSpec((1, t, t), lambda i, bs, bd: (i, 0, 0)),  # block
         ],
         out_specs=pl.BlockSpec((1, t), lambda i, bs, bd: (bd[i], 0)),
@@ -83,11 +102,11 @@ def frontier_relax_pallas(src_vals: jnp.ndarray,    # (ntiles, T) f32
         kwargs["compiler_params"] = pltpu.CompilerParams(
             dimension_semantics=("arbitrary",))
     out = pl.pallas_call(
-        _relax_kernel,
+        _make_relax_kernel(semiring),
         grid_spec=grid_spec,
         out_shape=jax.ShapeDtypeStruct((ntiles, t), jnp.float32),
-        input_output_aliases={3: 0},   # alias attrs -> out: untouched tiles
-        interpret=interpret,           # keep their current attributes
+        input_output_aliases={3: 0},   # alias carry -> out: untouched tiles
+        interpret=interpret,           # keep their carry values
         **kwargs,
-    )(bsrc, bdst, src_vals, attrs, blocks)
+    )(bsrc, bdst, src_vals, carry, blocks)
     return out

@@ -3,10 +3,13 @@
 `build_blocks` converts a CSR graph (+ optional FLIP mapping, whose
 vertex->PE placement becomes the vertex->tile permutation: the compiled
 placement minimizes cross-tile edges exactly like it minimizes NoC hops)
-into the block-sparse tile form the kernel consumes.
+into the block-sparse tile form the kernel consumes. The algorithm's
+`VertexAlgebra` decides the stored ⊗ operand per edge (`edge_value`) and
+the fill for absent edges (the semiring's ⊕-identity, so empty lanes drop
+out of every reduction).
 
 `frontier_relax` dispatches: Pallas on TPU, Pallas-interpret when forced
-(tests), and a vectorized segment-min jnp fallback elsewhere (CPU).
+(tests), and a vectorized segment-reduce jnp fallback elsewhere (CPU).
 """
 from __future__ import annotations
 
@@ -17,29 +20,38 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.algebra import MIN_PLUS, Semiring, VertexAlgebra, get_algebra
 from repro.graphs.csr import Graph
 from repro.kernels.frontier.frontier import frontier_relax_pallas
-
-INF = np.float32(np.inf)
 
 
 @dataclasses.dataclass
 class BlockedGraph:
-    """Block-sparse tiled adjacency in (min,+) form."""
+    """Block-sparse tiled adjacency over one algebra's semiring."""
     n: int                      # true vertex count
     tile: int                   # T
     ntiles: int
-    blocks: jnp.ndarray         # (nb, T, T) f32, +inf = no edge
+    blocks: jnp.ndarray         # (nb, T, T) f32, ⊕-identity = no edge
     bsrc: jnp.ndarray           # (nb,) i32, sorted by (bdst, bsrc)
     bdst: jnp.ndarray           # (nb,) i32
     perm: np.ndarray            # original vertex id -> tiled position
     inv_perm: np.ndarray        # tiled position -> original vertex id
+    algebra: VertexAlgebra = None
 
     @property
     def padded_n(self) -> int:
         return self.ntiles * self.tile
 
-    def to_tiled(self, attrs_orig: np.ndarray, fill=INF) -> jnp.ndarray:
+    @property
+    def semiring(self) -> Semiring:
+        if self.algebra is None:
+            raise ValueError("BlockedGraph built without an algebra; "
+                             "construct it via build_blocks(graph, algo)")
+        return self.algebra.semiring
+
+    def to_tiled(self, attrs_orig: np.ndarray, fill=None) -> jnp.ndarray:
+        if fill is None:
+            fill = np.float32(self.semiring.zero)
         out = np.full(self.padded_n, fill, dtype=np.float32)
         out[self.perm] = attrs_orig
         return jnp.asarray(out.reshape(self.ntiles, self.tile))
@@ -49,15 +61,18 @@ class BlockedGraph:
         return flat[self.perm]
 
 
-def build_blocks(graph: Graph, algo: str = "sssp", tile: int = 128,
+def build_blocks(graph: Graph, algo: str | VertexAlgebra = "sssp",
+                 tile: int = 128,
                  order: np.ndarray | None = None) -> BlockedGraph:
-    """Block-sparse (min,+) adjacency.
+    """Block-sparse semiring adjacency for any registered algebra.
 
-    algo: 'bfs' (unit weights), 'sssp' (edge weights), 'wcc' (zero weights,
-    symmetrized). `order`: optional vertex ordering (e.g. from the FLIP
-    mapping compiler); order[k] = original id of the vertex at tiled
-    position k.
+    algo: a registered algorithm name ('bfs', 'sssp', 'wcc', 'pagerank',
+    'widest', 'reach', ...) or a `VertexAlgebra` directly. `order`:
+    optional vertex ordering (e.g. from the FLIP mapping compiler);
+    order[k] = original id of the vertex at tiled position k.
     """
+    alg = algo if isinstance(algo, VertexAlgebra) else get_algebra(algo)
+    sr = alg.semiring
     n = graph.n
     if order is None:
         order = np.arange(n)
@@ -65,16 +80,12 @@ def build_blocks(graph: Graph, algo: str = "sssp", tile: int = 128,
     perm[order] = np.arange(n)
 
     ntiles = max(1, -(-n // tile))
+    outdeg = graph.out_degree()
     edges = []
     for u, v, w in graph.edge_list():
-        if algo == "bfs":
-            wval = 1.0
-        elif algo == "wcc":
-            wval = 0.0
-        else:
-            wval = w
+        wval = alg.edge_value(u, v, w, outdeg)
         edges.append((perm[u], perm[v], wval))
-        if algo == "wcc":
+        if alg.undirected:
             edges.append((perm[v], perm[u], wval))
 
     by_block: dict[tuple[int, int], list[tuple[int, int, float]]] = {}
@@ -83,48 +94,55 @@ def build_blocks(graph: Graph, algo: str = "sssp", tile: int = 128,
         by_block.setdefault(key, []).append((pu % tile, pv % tile, w))
 
     # every destination tile must appear at least once so its output block
-    # is initialized from attrs (blocks of all-inf act as identity)
+    # is initialized from the carry (all-identity blocks act as identity)
     for d in range(ntiles):
         by_block.setdefault((d, d), [])
 
     keys = sorted(by_block)
     nb = len(keys)
-    blocks = np.full((nb, tile, tile), INF, dtype=np.float32)
+    blocks = np.full((nb, tile, tile), np.float32(sr.zero), dtype=np.float32)
     bsrc = np.empty(nb, dtype=np.int32)
     bdst = np.empty(nb, dtype=np.int32)
     for i, (d, s) in enumerate(keys):
         bdst[i], bsrc[i] = d, s
         for su, dv, w in by_block[(d, s)]:
-            blocks[i, su, dv] = min(blocks[i, su, dv], np.float32(w))
+            # parallel edges ⊕-combine (min for tropical, + for PageRank)
+            blocks[i, su, dv] = sr.add_np(blocks[i, su, dv], np.float32(w))
     return BlockedGraph(n=n, tile=tile, ntiles=ntiles,
                         blocks=jnp.asarray(blocks),
                         bsrc=jnp.asarray(bsrc), bdst=jnp.asarray(bdst),
-                        perm=perm, inv_perm=np.asarray(order))
+                        perm=perm, inv_perm=np.asarray(order),
+                        algebra=alg)
 
 
 # --------------------------------------------------------------------- #
 # dispatching step op
 # --------------------------------------------------------------------- #
-@jax.jit
-def _relax_jnp(src_vals, attrs, blocks, bsrc, bdst):
-    """Vectorized fallback: per-block candidate + segment-min by bdst."""
-    ntiles, t = attrs.shape
+@functools.partial(jax.jit, static_argnames=("semiring",))
+def _relax_jnp(src_vals, carry, blocks, bsrc, bdst,
+               semiring: Semiring = MIN_PLUS):
+    """Vectorized fallback: per-block ⊗-combine + segment-⊕ by bdst."""
+    ntiles, t = carry.shape
     sv = src_vals[bsrc]                                  # (nb, T)
-    cand = jnp.min(sv[:, :, None] + blocks, axis=1)      # (nb, T)
-    best = jax.ops.segment_min(cand, bdst, num_segments=ntiles)
-    return jnp.minimum(attrs, best)
+    cand = semiring.add_reduce_jnp(
+        semiring.mul_jnp(sv[:, :, None], blocks), axis=1)  # (nb, T)
+    best = semiring.segment_reduce_jnp(cand, bdst, ntiles)
+    return semiring.add_jnp(carry, best)
 
 
-def frontier_relax(src_vals, attrs, bg: BlockedGraph, mode: str = "auto"):
+def frontier_relax(src_vals, carry, bg: BlockedGraph, mode: str = "auto"):
     """One frontier relaxation step over a BlockedGraph.
 
-    src_vals: (ntiles, T) f32 -- attrs where active, +inf where not.
-    attrs:    (ntiles, T) f32 current attributes.
+    src_vals: (ntiles, T) f32 -- attrs where active, ⊕-identity where not.
+    carry:    (ntiles, T) f32 values merged into every destination.
     mode: 'auto' | 'pallas' | 'interpret' | 'jnp'.
     """
+    sr = bg.semiring
     if mode == "auto":
         mode = "pallas" if jax.default_backend() == "tpu" else "jnp"
     if mode == "jnp":
-        return _relax_jnp(src_vals, attrs, bg.blocks, bg.bsrc, bg.bdst)
-    return frontier_relax_pallas(src_vals, attrs, bg.blocks, bg.bsrc,
-                                 bg.bdst, interpret=(mode == "interpret"))
+        return _relax_jnp(src_vals, carry, bg.blocks, bg.bsrc, bg.bdst,
+                          semiring=sr)
+    return frontier_relax_pallas(src_vals, carry, bg.blocks, bg.bsrc,
+                                 bg.bdst, semiring=sr,
+                                 interpret=(mode == "interpret"))

@@ -1,37 +1,45 @@
 """Pure-jnp oracle for the frontier relaxation step.
 
 One step of FLIP's data-centric execution in dense form: every vertex in
-the frontier scatters `attr[u] + W[u, v]` along its out-edges; destinations
-merge with tropical min. W encodes the algorithm (DESIGN.md Sec. 2):
+the frontier scatters `attr[u] ⊗ W[u, v]` along its out-edges;
+destinations merge with the semiring's ⊕. W encodes the algorithm
+(DESIGN.md Sec. 2):
 
-    BFS : W[u,v] = 1 on edges           (hop levels)
-    SSSP: W[u,v] = weight               (shortest path)
-    WCC : W[u,v] = 0 on both half-edges (min-label propagation)
+    BFS     : (min,+),  W[u,v] = 1 on edges      (hop levels)
+    SSSP    : (min,+),  W[u,v] = weight          (shortest path)
+    WCC     : (min,+),  W[u,v] = 0 on both half-edges (min-label prop.)
+    widest  : (max,min) W[u,v] = weight          (bottleneck bandwidth)
+    reach   : (or,and)  W[u,v] = 1 on edges      (reachability)
 
-Absent edges are +inf. Returns (new_attrs, new_frontier): the new frontier
-is exactly the set of vertices whose attribute improved -- FLIP's
-"scatter only on update" rule.
+Absent edges hold the ⊕-identity. Returns (new_attrs, new_frontier): the
+new frontier is exactly the set of vertices whose attribute strictly
+⊕-improved -- FLIP's "scatter only on update" rule. (Delta-PageRank's
+residual step is not a monotone merge; see `FlipEngine` for its carry
+form.)
 """
 from __future__ import annotations
 
 import jax.numpy as jnp
 
-INF = jnp.inf
+from repro.algebra import MIN_PLUS, Semiring
 
 
 def relax_step_ref(attrs: jnp.ndarray, frontier: jnp.ndarray,
-                   w_dense: jnp.ndarray):
-    """attrs: (n,) f32; frontier: (n,) bool; w_dense: (n, n) f32 (+inf = no
-    edge). Returns (new_attrs (n,), new_frontier (n,))."""
-    src_vals = jnp.where(frontier, attrs, INF)              # (n,)
-    msgs = src_vals[:, None] + w_dense                      # (n, n)
-    best = jnp.min(msgs, axis=0)                            # (n,)
-    new_attrs = jnp.minimum(attrs, best)
-    new_frontier = new_attrs < attrs
+                   w_dense: jnp.ndarray, semiring: Semiring = MIN_PLUS):
+    """attrs: (n,) f32; frontier: (n,) bool; w_dense: (n, n) f32
+    (⊕-identity = no edge). Returns (new_attrs (n,), new_frontier (n,))."""
+    src_vals = jnp.where(frontier, attrs, semiring.zero)    # (n,)
+    best = semiring.add_reduce_jnp(
+        semiring.mul_jnp(src_vals[:, None], w_dense), axis=0)  # (n,)
+    new_attrs = semiring.add_jnp(attrs, best)
+    new_frontier = jnp.logical_and(
+        semiring.add_jnp(new_attrs, attrs) == new_attrs,
+        new_attrs != attrs)
     return new_attrs, new_frontier
 
 
-def run_to_fixpoint_ref(attrs, frontier, w_dense, max_steps: int = 10_000):
+def run_to_fixpoint_ref(attrs, frontier, w_dense, max_steps: int = 10_000,
+                        semiring: Semiring = MIN_PLUS):
     """Host-side loop for small oracles (tests only)."""
     import numpy as np
     attrs = jnp.asarray(attrs)
@@ -39,5 +47,5 @@ def run_to_fixpoint_ref(attrs, frontier, w_dense, max_steps: int = 10_000):
     for _ in range(max_steps):
         if not bool(frontier.any()):
             break
-        attrs, frontier = relax_step_ref(attrs, frontier, w_dense)
+        attrs, frontier = relax_step_ref(attrs, frontier, w_dense, semiring)
     return np.asarray(attrs)
