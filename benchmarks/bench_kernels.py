@@ -1,26 +1,43 @@
 """Kernel micro-benchmarks (CPU wall time of the jnp paths + interpret
-correctness cost; on TPU these dispatch to the Pallas kernels)."""
+correctness cost; on TPU these dispatch to the Pallas kernels).
+
+Emits the per-algebra frontier-relax rows future PRs track, a batched
+(B, ntiles, T) relax row, and the end-to-end multi-query batching win:
+B=32 BFS sources on an LRN road network through one `run_batch` fixpoint
+vs 32 sequential `run()` calls on the same backend. Results land in
+BENCH_kernels.json via `common.write_json`.
+"""
 from __future__ import annotations
+
+import os
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
-from benchmarks.common import emit, timed
+from benchmarks.common import emit, timed, write_json
 from repro.algebra import ALGEBRAS
-from repro.graphs import make_road_network
+from repro.core.engine import FlipEngine
+from repro.graphs import make_dataset, make_road_network
 from repro.kernels.frontier import build_blocks, frontier_relax
 from repro.models.attention import attend
 from repro.kernels.ssd.ref import ssd_ref
 
 
 def run():
+    fast = bool(os.environ.get("BENCH_FAST"))
     # frontier relax step (jnp path), one timing per registered algebra:
     # future PRs read these rows to track the per-semiring perf trajectory
-    g = make_road_network(1024, seed=0)
+    # row ids carry the graph size: BENCH_FAST runs a 256-vertex graph,
+    # full runs the historical 1k one, and the two must never be compared
+    # under one name in the recorded trajectory
+    n = 256 if fast else 1024
+    size = "256" if fast else "1k"
+    g = make_road_network(n, seed=0)
     rng = np.random.default_rng(0)
+    bgs = {}
     for algo in sorted(ALGEBRAS):
-        bg = build_blocks(g, algo, tile=128)
+        bg = bgs[algo] = build_blocks(g, algo, tile=128)
         alg = bg.algebra
         vals = (alg.initial_attrs(g.n, 0) if alg.kind == "residual"
                 else rng.uniform(0, 10, g.n).astype(np.float32))
@@ -30,9 +47,20 @@ def run():
         f(attrs, attrs).block_until_ready()
         _, us = timed(lambda: f(attrs, attrs).block_until_ready(),
                       repeats=20)
-        emit(f"kernel_frontier_relax_1k_{algo}", us,
+        emit(f"kernel_frontier_relax_{size}_{algo}", us,
              f"semiring={alg.semiring.name} edges={g.m} "
              f"blocks={bg.blocks.shape[0]}")
+
+    # batched relax: B=32 queries against the same resident block stream
+    bg = bgs["bfs"]
+    batt = bg.to_tiled(rng.uniform(0, 10, (32, g.n)).astype(np.float32))
+    fb = jax.jit(lambda s, a: frontier_relax(s, a, bg, mode="jnp"))
+    fb(batt, batt).block_until_ready()
+    _, us = timed(lambda: fb(batt, batt).block_until_ready(), repeats=20)
+    emit(f"kernel_frontier_relax_{size}_bfs_b32", us,
+         f"batched B=32 edges={g.m} blocks={bg.blocks.shape[0]}")
+
+    bench_batching_win(fast)
 
     # attention (lax_flash path)
     q = jnp.ones((1, 2048, 4, 64), jnp.float32)
@@ -56,8 +84,29 @@ def run():
     emit("kernel_ssd_1k", us, "chunk=128")
 
 
+def bench_batching_win(fast: bool):
+    """End-to-end multi-query amortization: B=32 BFS sources on the LRN
+    dataset, one shared `run_batch` fixpoint vs 32 sequential `run()`
+    calls (same engine, same jit cache, same backend)."""
+    g = next(make_dataset("LRN", 1, seed0=0))
+    rng = np.random.default_rng(0)
+    srcs = rng.choice(g.n, size=32, replace=False)
+    eng = FlipEngine.build(g, "bfs", tile=128)
+    eng.run(int(srcs[0]))                      # warm the solo executable
+    eng.run_batch(srcs)                        # warm the batched one
+    _, us_seq = timed(lambda: [eng.run(int(s)) for s in srcs],
+                      repeats=1 if fast else 3)
+    _, us_bat = timed(lambda: eng.run_batch(srcs),
+                      repeats=1 if fast else 3)
+    emit("frontier_bfs_lrn_seq32", us_seq, f"32 sequential run() |V|={g.n}")
+    emit("frontier_bfs_lrn_batch32", us_bat, "one run_batch fixpoint, B=32")
+    emit("frontier_bfs_lrn_batch32_speedup", us_seq / us_bat,
+         "sequential/batched wall ratio (x, higher is better)")
+
+
 def main():
     run()
+    write_json("kernels")
 
 
 if __name__ == "__main__":

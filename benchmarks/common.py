@@ -1,12 +1,24 @@
-"""Shared helpers for the benchmark harness."""
+"""Shared helpers for the benchmark harness.
+
+Every `emit` prints the historical ``name,us_per_call,derived`` CSV row
+AND records it in an in-process results list; `write_json(tag)` dumps the
+rows collected so far to ``BENCH_<tag>.json`` (under ``$BENCH_OUT`` if
+set, else the cwd), so CI can upload the perf trajectory as an artifact.
+"""
 from __future__ import annotations
 
+import json
+import os
 import time
+
+RESULTS: list[dict] = []
 
 
 def emit(name: str, us_per_call: float, derived: str = ""):
-    """CSV row: name, us_per_call, derived."""
+    """CSV row: name, us_per_call, derived (also recorded for JSON)."""
     print(f"{name},{us_per_call:.3f},{derived}")
+    RESULTS.append({"name": name, "us_per_call": round(us_per_call, 3),
+                    "derived": derived})
 
 
 def timed(fn, *args, repeats: int = 1, **kw):
@@ -15,3 +27,14 @@ def timed(fn, *args, repeats: int = 1, **kw):
     for _ in range(repeats):
         out = fn(*args, **kw)
     return out, (time.time() - t0) * 1e6 / repeats
+
+
+def write_json(tag: str) -> str:
+    """Dump everything emitted so far to BENCH_<tag>.json; returns path."""
+    out_dir = os.environ.get("BENCH_OUT", ".")
+    os.makedirs(out_dir, exist_ok=True)
+    path = os.path.join(out_dir, f"BENCH_{tag}.json")
+    with open(path, "w") as f:
+        json.dump({"tag": tag, "rows": RESULTS}, f, indent=1)
+    print(f"[bench] wrote {len(RESULTS)} rows to {path}")
+    return path

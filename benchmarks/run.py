@@ -55,6 +55,8 @@ def main() -> None:
             roofline.main()
     except Exception:
         traceback.print_exc()
+    from benchmarks.common import write_json
+    write_json("all")
 
 
 if __name__ == "__main__":

@@ -80,24 +80,36 @@ class VertexAlgebra:
 
     # ------------------------------------------------------------------ #
     # initial state (original vertex order; engine re-tiles it)
+    #
+    # `src` is a single source vertex or a sequence of B of them: a scalar
+    # yields the classic (n,) vectors, a sequence yields (B, n) -- one
+    # independent query per row, the layout every batched layer threads
+    # through as (B, ntiles, T).
     # ------------------------------------------------------------------ #
-    def initial_attrs(self, n: int, src: int) -> np.ndarray:
+    def initial_attrs(self, n: int, src) -> np.ndarray:
         sr = self.semiring
+        srcs = np.atleast_1d(np.asarray(src, dtype=np.int64))
+        b = srcs.shape[0]
         if self.kind == "residual":
             # un-pushed residual of the series p = sum_k M^k b
-            return np.full(n, (1.0 - self.damping) / n, dtype=np.float32)
-        if self.all_start:           # WCC: label = own id
-            return np.arange(n, dtype=np.float32)
-        a = np.full(n, sr.zero, dtype=np.float32)
-        a[src] = np.float32(sr.one)
-        return a
+            a = np.full((b, n), (1.0 - self.damping) / n, dtype=np.float32)
+        elif self.all_start:         # WCC: label = own id
+            a = np.broadcast_to(np.arange(n, dtype=np.float32),
+                                (b, n)).copy()
+        else:
+            a = np.full((b, n), sr.zero, dtype=np.float32)
+            a[np.arange(b), srcs] = np.float32(sr.one)
+        return a if np.ndim(src) else a[0]
 
-    def initial_frontier(self, n: int, src: int) -> np.ndarray:
+    def initial_frontier(self, n: int, src) -> np.ndarray:
+        srcs = np.atleast_1d(np.asarray(src, dtype=np.int64))
+        b = srcs.shape[0]
         if self.all_start or self.kind == "residual":
-            return np.ones(n, dtype=bool)
-        f = np.zeros(n, dtype=bool)
-        f[src] = True
-        return f
+            f = np.ones((b, n), dtype=bool)
+        else:
+            f = np.zeros((b, n), dtype=bool)
+            f[np.arange(b), srcs] = True
+        return f if np.ndim(src) else f[0]
 
     # ------------------------------------------------------------------ #
     # simulator-side scalar ops (numpy)
@@ -124,6 +136,11 @@ class VertexAlgebra:
 
     # ------------------------------------------------------------------ #
     # engine-side step hooks (jnp, traced under jit/shard_map)
+    #
+    # All hooks are elementwise over the state arrays, so they accept any
+    # leading query axes unchanged: the engine passes (ntiles, T) for one
+    # query and (B, ntiles, T) for a batch, and each row of the batch
+    # behaves exactly like an independent single-query run.
     # ------------------------------------------------------------------ #
     def improved_jnp(self, new, old):
         return jnp.logical_and(self.semiring.add_jnp(new, old) == new,

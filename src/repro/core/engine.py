@@ -17,11 +17,18 @@ pagerank, widest, reach, ...): the engine itself only threads the
 algebra's scatter/carry/post-step hooks around the semiring relax kernel,
 so a new algebra runs here unchanged.
 
-Both modes run inside one `jax.lax.while_loop` fixpoint and can execute
-distributed via `shard_map`: destination tiles are partitioned over a mesh
-axis (devices = PE clusters), each device relaxes its local blocks, and the
-updated attribute vector is re-assembled with an all-gather -- the
-collective is the NoC.
+Execution is batched over independent queries: the state is
+(B, ntiles, T) -- B sources relaxing against one shared block structure
+inside one `jax.lax.while_loop` fixpoint (`run_batch`; `run` is the B=1
+view). Queries whose frontier has emptied are frozen by a per-query
+convergence mask, so a long-tail query never perturbs finished ones and
+batched results are bit-for-bit the per-source results.
+
+Both paths can execute distributed via `shard_map`: destination tiles
+are partitioned over a mesh axis (devices = PE clusters), queries stay
+replicated, each device relaxes its local blocks, and the updated
+attribute vector is re-assembled with an all-gather -- the collective is
+the NoC, and its cost amortizes over the whole batch.
 """
 from __future__ import annotations
 
@@ -75,16 +82,19 @@ class FlipEngine:
         return self.bg.algebra
 
     # -------------------------------------------------------------- #
-    def initial_state(self, src: int):
-        """(attrs, aux, frontier) as (ntiles, T) arrays; padded lanes hold
-        the ⊕-identity so they never activate or contribute."""
+    def initial_state(self, srcs):
+        """(attrs, aux, frontier) as (B, ntiles, T) arrays for a batch of
+        sources; padded lanes hold the ⊕-identity so they never activate
+        or contribute."""
         bg, alg = self.bg, self.algebra
-        attrs = bg.to_tiled(alg.initial_attrs(bg.n, src))
-        aux = bg.to_tiled(np.zeros(bg.n, dtype=np.float32), fill=0.0)
-        frontier = np.zeros(bg.padded_n, dtype=bool)
-        frontier[bg.perm] = alg.initial_frontier(bg.n, src)
+        srcs = np.atleast_1d(np.asarray(srcs, dtype=np.int64))
+        b = srcs.shape[0]
+        attrs = bg.to_tiled(alg.initial_attrs(bg.n, srcs))
+        aux = bg.to_tiled(np.zeros((b, bg.n), dtype=np.float32), fill=0.0)
+        frontier = np.zeros((b, bg.padded_n), dtype=bool)
+        frontier[:, bg.perm] = alg.initial_frontier(bg.n, srcs)
         return attrs, aux, jnp.asarray(
-            frontier.reshape(bg.ntiles, bg.tile))
+            frontier.reshape(b, bg.ntiles, bg.tile))
 
     def _step(self, attrs, aux, frontier):
         alg = self.algebra
@@ -93,35 +103,65 @@ class FlipEngine:
         new = frontier_relax(sv, carry, self.bg, mode=self.relax_mode)
         return alg.post_step_jnp(attrs, aux, sv, new)
 
-    # -------------------------------------------------------------- #
-    def run(self, src: int = 0):
-        """Single-device fixpoint; returns the algebra's result vector in
-        original vertex order plus the number of relaxation steps taken."""
-        attrs0, aux0, frontier0 = self.initial_state(src)
+    def _fixpoint(self, attrs0, aux0, frontier0):
+        """Shared (B, ntiles, T) while_loop with per-query convergence
+        masking: a query whose frontier emptied is frozen, so late
+        queries in the batch cannot perturb finished ones (op-mode
+        sweeps and residual aux accumulation would otherwise keep
+        touching them) and per-query step counts match solo runs."""
 
         def cond(state):
             _, _, frontier, steps = state
-            return jnp.logical_and(frontier.any(), steps < self.max_steps)
+            return jnp.logical_and(frontier.any(),
+                                   steps.max() < self.max_steps)
 
         def body(state):
             attrs, aux, frontier, steps = state
-            attrs, aux, frontier = self._step(attrs, aux, frontier)
-            return attrs, aux, frontier, steps + 1
+            live = frontier.any(axis=(1, 2))          # (B,) per query
+            attrs_n, aux_n, frontier_n = self._step(attrs, aux, frontier)
+            m = live[:, None, None]
+            return (jnp.where(m, attrs_n, attrs),
+                    jnp.where(m, aux_n, aux),
+                    jnp.logical_and(frontier_n, m),
+                    steps + live.astype(jnp.int32))
 
+        steps0 = jnp.zeros(attrs0.shape[0], jnp.int32)
         attrs, aux, _, steps = jax.lax.while_loop(
-            cond, body, (attrs0, aux0, frontier0, jnp.int32(0)))
-        return self.bg.to_orig(self.algebra.finalize(attrs, aux)), int(steps)
+            cond, body, (attrs0, aux0, frontier0, steps0))
+        return attrs, aux, steps
 
     # -------------------------------------------------------------- #
-    def run_distributed(self, src: int = 0, mesh: Mesh | None = None,
+    def run(self, src: int = 0):
+        """Single-query fixpoint; returns the algebra's result vector in
+        original vertex order plus the number of relaxation steps taken."""
+        out, steps = self.run_batch([src])
+        return out[0], int(steps[0])
+
+    def run_batch(self, srcs):
+        """Batched fixpoint over B independent sources sharing one weight-
+        block stream; returns ((B, n) results in original vertex order,
+        (B,) per-query relaxation step counts). Each row is bit-for-bit
+        the corresponding `run(src)` result."""
+        attrs0, aux0, frontier0 = self.initial_state(srcs)
+        attrs, aux, steps = self._fixpoint(attrs0, aux0, frontier0)
+        return (self.bg.to_orig(self.algebra.finalize(attrs, aux)),
+                np.asarray(steps))
+
+    # -------------------------------------------------------------- #
+    def run_distributed(self, src=0, mesh: Mesh | None = None,
                         axis: str = "data"):
-        """shard_map fixpoint: destination tiles sharded over `axis`.
+        """shard_map fixpoint: destination tiles sharded over `axis`,
+        queries replicated; returns `(result, steps)` like `run` (batched
+        `(B, n)` / `(B,)` forms when `src` is a sequence).
 
         Each device owns a contiguous slab of destination tiles and the
         blocks that write them; per step it computes its slab's new attrs
-        and the global attribute vector is re-formed with an all-gather
-        (the TPU analogue of FLIP's NoC scatter). Works for every
-        registered algebra in both 'data' and 'op' modes.
+        for every query in the batch and the global attribute vector is
+        re-formed with an all-gather (the TPU analogue of FLIP's NoC
+        scatter) -- one collective per step regardless of B, so the NoC
+        cost amortizes over the batch. Works for every registered algebra
+        in both 'data' and 'op' modes; a device whose slab holds only
+        padded tiles owns zero real blocks and runs identity no-op blocks.
         """
         if mesh is None:
             devs = np.array(jax.devices())
@@ -130,6 +170,8 @@ class FlipEngine:
         bg, alg = self.bg, self.algebra
         sr = alg.semiring
         zero = np.float32(sr.zero)
+        batched = bool(np.ndim(src))
+        srcs = np.atleast_1d(np.asarray(src, dtype=np.int64))
 
         # pad tiles to a multiple of ndev, then partition blocks by owner
         ntiles_p = -(-bg.ntiles // ndev) * ndev
@@ -138,7 +180,9 @@ class FlipEngine:
         tiles_per_dev = ntiles_p // ndev
         for i, d in enumerate(bdst):
             per_dev_blocks[d // tiles_per_dev].append(i)
-        max_nb = max(len(b) for b in per_dev_blocks)
+        # >= 1 so a device owning zero blocks still gets a (1, T, T)
+        # all-identity slab (exact no-op) instead of a zero-size array
+        max_nb = max(1, max(len(b) for b in per_dev_blocks))
         t = bg.tile
         blocks_sh = np.full((ndev, max_nb, t, t), zero, dtype=np.float32)
         bsrc_sh = np.zeros((ndev, max_nb), dtype=np.int32)
@@ -150,25 +194,22 @@ class FlipEngine:
                 bsrc_sh[dev, j] = bsrc[i]
                 # destination indices local to the device slab
                 bdst_sh[dev, j] = bdst[i] - dev * tiles_per_dev
-            for j in range(len(idxs), max_nb):
-                # padding blocks: write slab-local tile 0 with all
-                # ⊕-identity entries = exact no-op
-                bsrc_sh[dev, j] = 0
-                bdst_sh[dev, j] = 0
+            # padding blocks (and the whole slab of a block-less device)
+            # keep bsrc/bdst 0 and all ⊕-identity entries = exact no-op
 
-        attrs0, aux0, frontier0 = self.initial_state(src)
+        attrs0, aux0, frontier0 = self.initial_state(srcs)
         pad = ntiles_p - bg.ntiles
         if pad:
-            attrs0 = jnp.pad(attrs0, ((0, pad), (0, 0)),
+            attrs0 = jnp.pad(attrs0, ((0, 0), (0, pad), (0, 0)),
                              constant_values=zero)
-            aux0 = jnp.pad(aux0, ((0, pad), (0, 0)))
-            frontier0 = jnp.pad(frontier0, ((0, pad), (0, 0)))
+            aux0 = jnp.pad(aux0, ((0, 0), (0, pad), (0, 0)))
+            frontier0 = jnp.pad(frontier0, ((0, 0), (0, pad), (0, 0)))
         op_mode = self.mode == "op"
 
         @functools.partial(
             shard_map, mesh=mesh,
             in_specs=(P(axis), P(axis), P(axis), P(None), P(None), P(None)),
-            out_specs=(P(None), P(None)),
+            out_specs=(P(None), P(None), P(None)),
             check_rep=False)
         def dist_fix(blocks, bsrc_l, bdst_l, attrs, aux, frontier):
             blocks, bsrc_l, bdst_l = blocks[0], bsrc_l[0], bdst_l[0]
@@ -176,30 +217,41 @@ class FlipEngine:
             def cond(state):
                 _, _, frontier, steps = state
                 return jnp.logical_and(frontier.any(),
-                                       steps < self.max_steps)
+                                       steps.max() < self.max_steps)
 
             def body(state):
                 attrs, aux, frontier, steps = state
+                live = frontier.any(axis=(1, 2))
                 sv, carry = alg.scatter_carry_jnp(attrs, frontier, op_mode)
                 carry_local = jax.lax.dynamic_slice_in_dim(
                     carry, jax.lax.axis_index(axis) * tiles_per_dev,
-                    tiles_per_dev, axis=0)
-                svb = sv[bsrc_l]                               # (nb, T)
+                    tiles_per_dev, axis=1)
+                svb = sv[:, bsrc_l]                        # (B, nb, T)
                 cand = sr.add_reduce_jnp(
-                    sr.mul_jnp(svb[:, :, None], blocks), axis=1)
-                best = sr.segment_reduce_jnp(cand, bdst_l, tiles_per_dev)
+                    sr.mul_jnp(svb[..., :, None], blocks), axis=-2)
+                best = jax.vmap(lambda c: sr.segment_reduce_jnp(
+                    c, bdst_l, tiles_per_dev))(cand)
                 new_local = sr.add_jnp(carry_local, best)
-                new = jax.lax.all_gather(new_local, axis, tiled=True)
-                attrs, aux, frontier = alg.post_step_jnp(attrs, aux, sv, new)
-                return attrs, aux, frontier, steps + 1
+                new = jax.lax.all_gather(new_local, axis, axis=1,
+                                         tiled=True)
+                attrs_n, aux_n, frontier_n = alg.post_step_jnp(
+                    attrs, aux, sv, new)
+                m = live[:, None, None]
+                return (jnp.where(m, attrs_n, attrs),
+                        jnp.where(m, aux_n, aux),
+                        jnp.logical_and(frontier_n, m),
+                        steps + live.astype(jnp.int32))
 
-            attrs_f, aux_f, _, _ = jax.lax.while_loop(
-                cond, body, (attrs, aux, frontier, jnp.int32(0)))
-            return attrs_f, aux_f
+            steps0 = jnp.zeros(attrs.shape[0], jnp.int32)
+            attrs_f, aux_f, _, steps = jax.lax.while_loop(
+                cond, body, (attrs, aux, frontier, steps0))
+            return attrs_f, aux_f, steps
 
         blocks_sh = jnp.asarray(blocks_sh)
-        attrs_f, aux_f = jax.jit(dist_fix)(
+        attrs_f, aux_f, steps = jax.jit(dist_fix)(
             blocks_sh, jnp.asarray(bsrc_sh), jnp.asarray(bdst_sh),
             attrs0, aux0, frontier0)
         out = self.algebra.finalize(attrs_f, aux_f)
-        return self.bg.to_orig(out[:bg.ntiles])
+        out = self.bg.to_orig(out[:, :bg.ntiles])
+        steps = np.asarray(steps)
+        return (out, steps) if batched else (out[0], int(steps[0]))

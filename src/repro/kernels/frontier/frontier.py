@@ -1,4 +1,4 @@
-"""Pallas TPU kernel: frontier-masked semiring relaxation.
+"""Pallas TPU kernel: frontier-masked semiring relaxation, batched.
 
 TPU-native form of FLIP's data-centric PE array (DESIGN.md Sec. 2): graph
 vertices are tiled onto the 8x128 VPU lane grid; one grid step relaxes all
@@ -22,10 +22,23 @@ position inside the block is the DRF register. Blocks are sorted by
 destination tile so a destination's partial ⊕ accumulates in VMEM across
 consecutive grid steps (revisit-friendly "arbitrary" dimension semantics).
 
+Batched execution (serving-style multi-query workloads): the state is
+(B, ntiles, T) -- B independent queries over one shared block structure --
+and the grid gains a trailing query dimension, grid = (nb, B). The weight
+block's index map ignores the query index, so each block is fetched into
+VMEM once and stays resident while all B queries relax against it (the
+whole point of batching: amortize the block stream over the batch). The
+output/carry specs cover the full (B, 1, T) destination slab and also
+ignore the query index, so every visit to one output slab is consecutive
+and the single-query accumulation semantics carry over unchanged. The
+packet trigger is per query: block i is skipped for query b exactly when
+that query's source tile holds only ⊕-identity lanes.
+
 Layout: tile size T is a multiple of 128 (lane width). VMEM working set
-per step = T*T*4 B (block) + 3*T*4 B (src vals, dst init, out) -- e.g.
-64.5 KiB for T=128, well inside the ~16 MiB VMEM budget; larger T=256/512
-trades fewer grid steps against VMEM (ops.py picks T).
+per step = T*T*4 B (block) + (2B+1)*T*4 B (per-query src vals, plus the
+B-row dst init and out slabs) -- e.g. 97 KiB for T=128, B=32, well inside
+the ~16 MiB VMEM budget; larger T=256/512 trades fewer grid steps against
+VMEM (ops.py picks T).
 """
 from __future__ import annotations
 
@@ -48,65 +61,77 @@ def _make_relax_kernel(semiring: Semiring):
 
     def _relax_kernel(bsrc_ref, bdst_ref, src_vals_ref, carry_ref,
                       block_ref, out_ref):
-        i = pl.program_id(0)
+        i = pl.program_id(0)           # weight block (outer: stays resident
+        b = pl.program_id(1)           # query in the batch    while b spins)
         prev = bdst_ref[jnp.maximum(i - 1, 0)]
         is_first = jnp.logical_or(i == 0, bdst_ref[i] != prev)
 
-        # First visit of this destination tile: seed with the carry values
-        # (current attrs for monotone algebras -- the ⊕-merge folds "no
-        # update" in; the un-absorbed residual for delta-PageRank).
-        @pl.when(is_first)
+        # First visit of this destination slab: seed all B rows with the
+        # carry values (current attrs for monotone algebras -- the ⊕-merge
+        # folds "no update" in; the un-absorbed residual for delta-PR).
+        @pl.when(jnp.logical_and(is_first, b == 0))
         def _init():
             out_ref[...] = carry_ref[...]
 
-        src_vals = src_vals_ref[...]   # (1, T) -- ⊕-identity where inactive
-        # FLIP trigger rule: skip the whole block if no source is active.
+        src_vals = src_vals_ref[0]     # (1, T) query b's source tile,
+        # FLIP trigger rule, per query:  ⊕-identity where inactive
+        # skip the block if none of this query's sources is active.
         @pl.when(jnp.any(src_vals != zero))
         def _relax():
             w = block_ref[0]           # (T, T): w[s, d]
             cand = add_reduce(mul(src_vals[0][:, None], w), axis=0)  # (T,)
-            out_ref[...] = add(out_ref[...], cand[None, :])
+            cur = out_ref[pl.ds(b, 1), 0, :]                      # (1, T)
+            out_ref[pl.ds(b, 1), 0, :] = add(cur, cand[None, :])
 
     return _relax_kernel
 
 
 @functools.partial(jax.jit, static_argnames=("semiring", "interpret"))
-def frontier_relax_pallas(src_vals: jnp.ndarray,    # (ntiles, T) f32
-                          carry: jnp.ndarray,       # (ntiles, T) f32
-                          blocks: jnp.ndarray,      # (nb, T, T) f32
-                          bsrc: jnp.ndarray,        # (nb,) i32, sorted by
-                          bdst: jnp.ndarray,        # (nb,) i32  (bdst, bsrc)
+def frontier_relax_pallas(src_vals: jnp.ndarray,  # (B?, ntiles, T) f32
+                          carry: jnp.ndarray,     # (B?, ntiles, T) f32
+                          blocks: jnp.ndarray,    # (nb, T, T) f32
+                          bsrc: jnp.ndarray,      # (nb,) i32, sorted by
+                          bdst: jnp.ndarray,      # (nb,) i32  (bdst, bsrc)
                           semiring: Semiring = MIN_PLUS,
                           interpret: bool = False) -> jnp.ndarray:
-    """One relaxation step: new[d] = carry[d] ⊕ (⊕_s sv[s] ⊗ W[s, d]).
+    """One relaxation step: new[b, d] = carry[b, d] ⊕ (⊕_s sv[b, s] ⊗ W[s, d]).
 
-    Destination tiles with no incident block keep their carry (callers
-    ensure every tile has at least one block, or accept identity via the
-    input_output_aliasing below).
+    `src_vals`/`carry` are (ntiles, T) for one query or (B, ntiles, T) for
+    a batch of B independent queries sharing the block structure; the
+    result has the same shape. Destination tiles with no incident block
+    keep their carry (callers ensure every tile has at least one block, or
+    accept identity via the input_output_aliasing below).
     """
+    squeeze = src_vals.ndim == 2
+    if squeeze:
+        src_vals, carry = src_vals[None], carry[None]
     nb, t, _ = blocks.shape
-    ntiles = carry.shape[0]
+    batch, ntiles = carry.shape[0], carry.shape[1]
 
     grid_spec = pltpu.PrefetchScalarGridSpec(
         num_scalar_prefetch=2,
-        grid=(nb,),
+        grid=(nb, batch),
         in_specs=[
-            pl.BlockSpec((1, t), lambda i, bs, bd: (bs[i], 0)),   # src vals
-            pl.BlockSpec((1, t), lambda i, bs, bd: (bd[i], 0)),   # carry
-            pl.BlockSpec((1, t, t), lambda i, bs, bd: (i, 0, 0)),  # block
+            pl.BlockSpec((1, 1, t),
+                         lambda i, b, bs, bd: (b, bs[i], 0)),    # src vals
+            pl.BlockSpec((batch, 1, t),
+                         lambda i, b, bs, bd: (0, bd[i], 0)),    # carry
+            pl.BlockSpec((1, t, t),
+                         lambda i, b, bs, bd: (i, 0, 0)),        # block
         ],
-        out_specs=pl.BlockSpec((1, t), lambda i, bs, bd: (bd[i], 0)),
+        out_specs=pl.BlockSpec((batch, 1, t),
+                               lambda i, b, bs, bd: (0, bd[i], 0)),
     )
     kwargs = {}
     if not interpret:
         kwargs["compiler_params"] = pltpu.CompilerParams(
-            dimension_semantics=("arbitrary",))
+            dimension_semantics=("arbitrary", "arbitrary"))
     out = pl.pallas_call(
         _make_relax_kernel(semiring),
         grid_spec=grid_spec,
-        out_shape=jax.ShapeDtypeStruct((ntiles, t), jnp.float32),
+        out_shape=jax.ShapeDtypeStruct((batch, ntiles, t), jnp.float32),
         input_output_aliases={3: 0},   # alias carry -> out: untouched tiles
         interpret=interpret,           # keep their carry values
         **kwargs,
     )(bsrc, bdst, src_vals, carry, blocks)
-    return out
+    return out[0] if squeeze else out

@@ -50,15 +50,21 @@ class BlockedGraph:
         return self.algebra.semiring
 
     def to_tiled(self, attrs_orig: np.ndarray, fill=None) -> jnp.ndarray:
+        """(n,) -> (ntiles, T), or batched (B, n) -> (B, ntiles, T);
+        padded lanes hold `fill` (default: the ⊕-identity)."""
         if fill is None:
             fill = np.float32(self.semiring.zero)
-        out = np.full(self.padded_n, fill, dtype=np.float32)
-        out[self.perm] = attrs_orig
-        return jnp.asarray(out.reshape(self.ntiles, self.tile))
+        attrs_orig = np.asarray(attrs_orig)
+        lead = attrs_orig.shape[:-1]
+        out = np.full(lead + (self.padded_n,), fill, dtype=np.float32)
+        out[..., self.perm] = attrs_orig
+        return jnp.asarray(out.reshape(lead + (self.ntiles, self.tile)))
 
     def to_orig(self, attrs_tiled) -> np.ndarray:
-        flat = np.asarray(attrs_tiled).reshape(-1)
-        return flat[self.perm]
+        """(ntiles, T) -> (n,), or batched (B, ntiles, T) -> (B, n)."""
+        flat = np.asarray(attrs_tiled)
+        flat = flat.reshape(flat.shape[:-2] + (-1,))
+        return flat[..., self.perm]
 
 
 def build_blocks(graph: Graph, algo: str | VertexAlgebra = "sssp",
@@ -121,20 +127,29 @@ def build_blocks(graph: Graph, algo: str | VertexAlgebra = "sssp",
 @functools.partial(jax.jit, static_argnames=("semiring",))
 def _relax_jnp(src_vals, carry, blocks, bsrc, bdst,
                semiring: Semiring = MIN_PLUS):
-    """Vectorized fallback: per-block ⊗-combine + segment-⊕ by bdst."""
-    ntiles, t = carry.shape
-    sv = src_vals[bsrc]                                  # (nb, T)
+    """Vectorized fallback: per-block ⊗-combine + segment-⊕ by bdst.
+
+    Accepts (ntiles, T) state or batched (B, ntiles, T): the combine
+    broadcasts the shared blocks over the query axis (XLA fuses the
+    ⊗+reduce, so the (B, nb, T, T) product is never materialized) and the
+    segment-⊕ maps over queries.
+    """
+    ntiles = carry.shape[-2]
+    sv = jnp.take(src_vals, bsrc, axis=-2)               # (..., nb, T)
     cand = semiring.add_reduce_jnp(
-        semiring.mul_jnp(sv[:, :, None], blocks), axis=1)  # (nb, T)
-    best = semiring.segment_reduce_jnp(cand, bdst, ntiles)
+        semiring.mul_jnp(sv[..., :, None], blocks), axis=-2)  # (..., nb, T)
+    def seg(x):
+        return semiring.segment_reduce_jnp(x, bdst, ntiles)
+    best = jax.vmap(seg)(cand) if cand.ndim == 3 else seg(cand)
     return semiring.add_jnp(carry, best)
 
 
 def frontier_relax(src_vals, carry, bg: BlockedGraph, mode: str = "auto"):
     """One frontier relaxation step over a BlockedGraph.
 
-    src_vals: (ntiles, T) f32 -- attrs where active, ⊕-identity where not.
-    carry:    (ntiles, T) f32 values merged into every destination.
+    src_vals: (ntiles, T) f32 -- attrs where active, ⊕-identity where
+              not -- or (B, ntiles, T) for a batch of B queries.
+    carry:    same shape; values merged into every destination.
     mode: 'auto' | 'pallas' | 'interpret' | 'jnp'.
     """
     sr = bg.semiring

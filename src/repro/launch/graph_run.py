@@ -2,16 +2,27 @@
 
 Runs any registered algebra (BFS / SSSP / WCC / PageRank / widest-path /
 reachability) on a Table-4 dataset through any of the three execution
-layers:
+layers, in either fabric mode:
 
   --engine sim     cycle-accurate FLIP simulator (paper evaluation vehicle)
   --engine jax     TPU-native frontier engine (single device)
   --engine dist    shard_map frontier engine over all local devices
-  --engine op      op-centric mode (classic-CGRA functional analogue)
+  --mode data|op   FLIP packet-triggered vs classic-CGRA full-sweep
+                   (jax/dist engines; the simulator is data-centric only)
 
-Example:
+`--engine op` is the deprecated pre-split spelling of
+`--engine jax --mode op` and keeps working.
+
+Multi-query serving: `--srcs 0,5,9` runs a batch of sources through one
+shared fixpoint (`run_batch` / batched `run_distributed`); `--batch B`
+additionally routes them through the `serve_graph.GraphServer` dispatch
+path in fixed-size buckets of B.
+
+Examples:
   PYTHONPATH=src python -m repro.launch.graph_run --algo sssp \
       --dataset LRN --engine sim --src 5
+  PYTHONPATH=src python -m repro.launch.graph_run --algo bfs \
+      --dataset LRN --engine jax --srcs 0,5,9,12 --mode op
 """
 from __future__ import annotations
 
@@ -32,10 +43,32 @@ def main():
                     choices=["Tree", "SRN", "LRN", "Syn", "ExtLRN"])
     ap.add_argument("--engine", default="sim",
                     choices=["sim", "jax", "dist", "op"])
+    ap.add_argument("--mode", default="data", choices=["data", "op"],
+                    help="fabric mode for the jax/dist engines")
     ap.add_argument("--graph-seed", type=int, default=0)
     ap.add_argument("--src", type=int, default=0)
+    ap.add_argument("--srcs", default=None,
+                    help="comma list of sources: batched multi-query run "
+                         "(jax/dist engines)")
+    ap.add_argument("--batch", type=int, default=0,
+                    help="with --srcs: dispatch through the serving "
+                         "front-end in fixed-size buckets of this many "
+                         "queries (0 = one run_batch over all sources)")
     ap.add_argument("--effort", type=int, default=1)
     args = ap.parse_args()
+
+    if args.engine == "op":            # deprecated pre-split spelling
+        print("[graph] --engine op is deprecated; use "
+              "--engine jax --mode op")
+        args.engine, args.mode = "jax", "op"
+    srcs = ([int(s) for s in args.srcs.split(",")]
+            if args.srcs else None)
+    if srcs is not None and args.engine == "sim":
+        raise SystemExit("--srcs needs --engine jax/dist (the cycle "
+                         "simulator runs one query per sweep)")
+    if args.batch and args.engine != "jax":
+        raise SystemExit("--batch dispatches through the single-device "
+                         "serving front-end; use it with --engine jax")
 
     g = next(make_dataset(args.dataset, 1, seed0=args.graph_seed))
     print(f"[graph] {args.dataset}: |V|={g.n} |E|={g.m}")
@@ -45,12 +78,17 @@ def main():
     print(f"[graph] FLIP compile {time.time() - t0:.2f}s  "
           f"avg routing length {mapping.avg_routing_length():.2f}")
 
+    if srcs is not None:
+        ok = _run_batched(args, g, mapping, srcs)
+        print(f"[graph] correct vs reference: {ok}")
+        return
+
     ref, _ = reference.run(args.algo, g, args.src)
     if args.engine == "sim":
         if not PROGRAMS[args.algo].sim_ok:
             raise SystemExit(
                 f"--engine sim cannot run {args.algo} (non-idempotent "
-                "merge); use --engine jax/op/dist")
+                "merge); use --engine jax/dist")
         r = simulate(mapping, PROGRAMS[args.algo], src=args.src)
         attrs = r.attrs
         mteps = g.m / (r.cycles / mapping.arch.freq_mhz)
@@ -65,21 +103,51 @@ def main():
             t_f = r.cycles / mapping.arch.freq_mhz
             print(f"[graph] speedup vs MCU {mcu.time_us / t_f:.1f}x, "
                   f"vs op-centric CGRA {cgra.time_us / t_f:.1f}x")
-    elif args.engine in ("jax", "op"):
+    elif args.engine == "jax":
         eng = FlipEngine.build(g, args.algo, mapping=mapping,
-                               mode=("op" if args.engine == "op" else
-                                     "data"))
+                               mode=args.mode)
         t0 = time.time()
         attrs, steps = eng.run(args.src)
-        print(f"[graph] {args.engine}: fixpoint in {steps} relaxation "
+        print(f"[graph] jax/{args.mode}: fixpoint in {steps} relaxation "
               f"steps ({time.time() - t0:.2f}s wall)")
     else:
-        eng = FlipEngine.build(g, args.algo, mapping=mapping)
-        attrs = eng.run_distributed(args.src)
-        print("[graph] dist: done over local device mesh")
+        eng = FlipEngine.build(g, args.algo, mapping=mapping,
+                               mode=args.mode)
+        attrs, steps = eng.run_distributed(args.src)
+        print(f"[graph] dist/{args.mode}: fixpoint in {steps} steps "
+              "over local device mesh")
 
     print(f"[graph] correct vs reference: "
           f"{PROGRAMS[args.algo].results_match(attrs, ref)}")
+
+
+def _run_batched(args, g, mapping, srcs) -> bool:
+    """--srcs path: one batched fixpoint (or serving-bucket dispatch)."""
+    t0 = time.time()
+    if args.batch:
+        from repro.launch.serve_graph import GraphServer
+        srv = GraphServer(g, batch=args.batch, mode=args.mode,
+                          mapping=mapping)
+        reqs = srv.serve((args.algo, s) for s in srcs)
+        outs = [r.result for r in reqs]
+        steps = [r.steps for r in reqs]
+        how = (f"{srv.dispatches} serving dispatches of "
+               f"B={args.batch}")
+    else:
+        eng = FlipEngine.build(g, args.algo, mapping=mapping,
+                               mode=args.mode)
+        run = (eng.run_distributed if args.engine == "dist"
+               else eng.run_batch)
+        outs, steps = run(np.asarray(srcs))
+        how = f"one {args.engine} batch of B={len(srcs)}"
+    print(f"[graph] {args.engine}/{args.mode}: {len(srcs)} queries via "
+          f"{how}, per-query steps {list(map(int, steps))} "
+          f"({time.time() - t0:.2f}s wall)")
+    ok = True
+    for s, out in zip(srcs, outs):
+        ref, _ = reference.run(args.algo, g, s)
+        ok &= bool(PROGRAMS[args.algo].results_match(out, ref))
+    return ok
 
 
 if __name__ == "__main__":

@@ -81,9 +81,37 @@ def test_engine_distributed_matches_reference():
     for algo, src in [("bfs", 2), ("sssp", 2), ("wcc", 0),
                       ("widest", 2), ("reach", 2), ("pagerank", 0)]:
         eng = FlipEngine.build(g, algo, tile=32)
-        got = eng.run_distributed(src)
+        got, steps = eng.run_distributed(src)    # (result, steps) like run
+        assert steps >= 1, algo
         ref, _ = reference.run(algo, g, src)
         assert ALGEBRAS[algo].results_match(got, ref), algo
+    print("OK")
+    """)
+    assert "OK" in out
+
+
+def test_engine_distributed_batched_and_zero_block_devices():
+    """Batched queries stay replicated while tiles shard; with ntiles <
+    ndev some devices own only padded tiles and zero real blocks -- the
+    degenerate all-identity slab must be an exact no-op, not a crash."""
+    out = _run_sub("""
+    import numpy as np
+    from repro.algebra import ALGEBRAS
+    from repro.graphs import make_road_network, reference
+    from repro.core.engine import FlipEngine
+    # ntiles = 2 over 8 devices: 6 devices own zero blocks
+    g = make_road_network(48, seed=1)
+    for algo in ("sssp", "pagerank"):
+        eng = FlipEngine.build(g, algo, tile=32)
+        srcs = np.array([5, 0, 17, 23])
+        outs, steps = eng.run_distributed(srcs)
+        assert outs.shape == (4, g.n) and steps.shape == (4,)
+        for b, s in enumerate(srcs):
+            ref, _ = reference.run(algo, g, int(s))
+            assert ALGEBRAS[algo].results_match(outs[b], ref), (algo, b)
+            solo, st = eng.run_distributed(int(s))
+            assert np.array_equal(outs[b], solo), (algo, b)
+            assert steps[b] == st, (algo, b)
     print("OK")
     """)
     assert "OK" in out

@@ -3,8 +3,10 @@ import jax.numpy as jnp
 import numpy as np
 import pytest
 
+from repro.algebra import ALGEBRAS
 from repro.graphs import Graph, make_road_network, make_synthetic, reference
 from repro.kernels.frontier import build_blocks, frontier_relax
+from repro.kernels.frontier.frontier import frontier_relax_pallas
 from repro.kernels.frontier.ref import relax_step_ref
 
 try:
@@ -88,6 +90,66 @@ def test_mapping_order_improves_block_sparsity():
     # the FLIP placement concentrates edges into fewer tile pairs than a
     # random vertex order (its routing-length objective == tile locality)
     assert bg_mapped.blocks.shape[0] < bg_rand.blocks.shape[0]
+
+
+# ------------------------------------------------------------------ #
+# edge cases: carry-only destinations and ragged vertex counts
+# ------------------------------------------------------------------ #
+@pytest.mark.parametrize("mode", ["jnp", "interpret"])
+@pytest.mark.parametrize("batched", [False, True])
+def test_destination_without_incident_block_keeps_carry(mode, batched):
+    """A destination tile no block writes must return its carry verbatim
+    (the input_output_aliases path in the Pallas kernel; the segment-⊕
+    identity in the jnp fallback)."""
+    from repro.algebra import MIN_PLUS
+    t, ntiles = 8, 3
+    rng = np.random.default_rng(0)
+    # one block, writing only dst tile 0 from src tile 2: tiles 1 and 2
+    # have no incident block at all
+    blocks = jnp.asarray(rng.uniform(1, 5, (1, t, t)).astype(np.float32))
+    bsrc = jnp.asarray([2], dtype=jnp.int32)
+    bdst = jnp.asarray([0], dtype=jnp.int32)
+    sv = rng.uniform(0, 10, (ntiles, t)).astype(np.float32)
+    carry = rng.uniform(0, 10, (ntiles, t)).astype(np.float32)
+    if batched:
+        sv = np.stack([sv, sv + 1.0])
+        carry = np.stack([carry, carry + 1.0])
+    if mode == "jnp":
+        from repro.kernels.frontier.ops import _relax_jnp
+        out = _relax_jnp(jnp.asarray(sv), jnp.asarray(carry), blocks,
+                         bsrc, bdst, semiring=MIN_PLUS)
+    else:
+        out = frontier_relax_pallas(jnp.asarray(sv), jnp.asarray(carry),
+                                    blocks, bsrc, bdst, semiring=MIN_PLUS,
+                                    interpret=True)
+    out = np.asarray(out)
+    # untouched destination tiles: carry, bit-for-bit
+    np.testing.assert_array_equal(out[..., 1:, :], carry[..., 1:, :])
+    # the written tile really relaxed
+    want = np.minimum(carry[..., 0, :],
+                      (sv[..., 2, :, None] + np.asarray(blocks)[0]).min(-2))
+    np.testing.assert_allclose(out[..., 0, :], want, atol=1e-6)
+
+
+@pytest.mark.parametrize("algo", sorted(ALGEBRAS))
+def test_to_tiled_round_trip_ragged_n(algo):
+    """Vertex counts that are not a multiple of the tile size survive
+    to_tiled/to_orig for every registered algebra, solo and batched."""
+    g = make_synthetic(37, 100, seed=8)           # 37 = 2*16 + 5
+    bg = build_blocks(g, algo, tile=16)
+    assert bg.padded_n > g.n                      # padding actually exists
+    rng = np.random.default_rng(1)
+    vec = rng.uniform(0.5, 9, g.n).astype(np.float32)
+    np.testing.assert_array_equal(bg.to_orig(bg.to_tiled(vec)), vec)
+    batch = rng.uniform(0.5, 9, (5, g.n)).astype(np.float32)
+    tiled = bg.to_tiled(batch)
+    assert tiled.shape == (5, bg.ntiles, bg.tile)
+    np.testing.assert_array_equal(bg.to_orig(tiled), batch)
+    # padded lanes hold the ⊕-identity, so they can never win a merge
+    flat = np.asarray(tiled).reshape(5, -1)
+    pad_lanes = np.setdiff1d(np.arange(bg.padded_n), bg.perm)
+    assert np.all(flat[:, pad_lanes] ==
+                  np.float32(ALGEBRAS[algo].semiring.zero))
 
 
 if HAVE_HYP:
