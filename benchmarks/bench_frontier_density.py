@@ -1,0 +1,101 @@
+"""Frontier-density sweep: dense vs frontier-compacted relax-step cost.
+
+Measures one jnp-path relaxation step on a power-law graph at several
+frontier densities (fraction of active source *tiles*), dense streaming
+vs compacted streaming (`frontier_relax(..., compact=True)`). This is the
+memory-system half of FLIP's data-centric skip: dense streaming touches
+every one of the nb weight blocks regardless of the frontier, compacted
+streaming touches only blocks with an active source tile, so the sparse
+step should cost O(active/nb) of the dense one.
+
+Used three ways:
+  * `benchmarks/bench_kernels.py` calls `run()` so the rows land in the
+    recorded BENCH_kernels.json perf trajectory;
+  * `python -m benchmarks.bench_frontier_density` writes its own
+    BENCH_frontier_density.json;
+  * CI runs it with ``--min-speedup`` as a regression guard: the job
+    fails if the 1%-density compacted step is not measurably cheaper
+    than the dense step.
+"""
+from __future__ import annotations
+
+import argparse
+import os
+
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks.common import emit, timed, write_json
+from repro.graphs import make_power_law
+from repro.kernels.frontier import build_blocks, frontier_relax
+
+DENSITIES = ((0.01, "1pct"), (0.05, "5pct"), (1.0, "100pct"))
+
+
+def _step_times(fast: bool, algo: str = "sssp", seed: int = 0):
+    """{label: (dense_us, compact_us, active_tiles)} for one relax step."""
+    n, tile = (2048, 64) if fast else (4096, 128)
+    g = make_power_law(n, 3 * n, seed=seed)
+    bg = build_blocks(g, algo, tile=tile)
+    sr = bg.algebra.semiring
+    rng = np.random.default_rng(seed)
+    attrs = bg.to_tiled(rng.uniform(0.5, 9, g.n).astype(np.float32))
+    repeats = 5 if fast else 20
+    out = {}
+    for density, label in DENSITIES:
+        # density = fraction of active source tiles: activity is confined
+        # to the first k tiles (frontier locality), matching how a real
+        # fixpoint's live frontier clusters under the FLIP placement
+        k = max(1, int(round(density * bg.ntiles)))
+        mask = np.zeros((bg.ntiles, bg.tile), dtype=bool)
+        mask[:k] = rng.random((k, bg.tile)) < 0.5
+        sv = jnp.where(jnp.asarray(mask), attrs, np.float32(sr.zero))
+        fd = lambda: frontier_relax(sv, attrs, bg, mode="jnp",
+                                    compact=False).block_until_ready()
+        fc = lambda: frontier_relax(sv, attrs, bg, mode="jnp",
+                                    compact=True).block_until_ready()
+        fd(), fc()                                   # warm the executables
+        np.testing.assert_array_equal(
+            np.asarray(frontier_relax(sv, attrs, bg, mode="jnp")),
+            np.asarray(frontier_relax(sv, attrs, bg, mode="jnp",
+                                      compact=True)))
+        _, us_d = timed(fd, repeats=repeats)
+        _, us_c = timed(fc, repeats=repeats)
+        out[label] = (us_d, us_c, k)
+    return out, g, bg
+
+
+def run(fast: bool | None = None) -> float:
+    """Emit the sweep rows; returns the 1%-density dense/compact ratio."""
+    fast = bool(os.environ.get("BENCH_FAST")) if fast is None else fast
+    size = "2k" if fast else "4k"
+    times, g, bg = _step_times(fast)
+    nb = bg.blocks.shape[0]
+    for label, (us_d, us_c, k) in times.items():
+        note = (f"power-law |V|={g.n} blocks={nb} "
+                f"active_tiles={k}/{bg.ntiles}")
+        emit(f"frontier_step_dense_{size}_{label}", us_d, note)
+        emit(f"frontier_step_compact_{size}_{label}", us_c, note)
+    speedup = times["1pct"][0] / times["1pct"][1]
+    emit(f"frontier_compact_speedup_{size}_1pct", speedup,
+         "dense/compacted step wall ratio at 1% active tiles "
+         "(x, higher is better)")
+    return speedup
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--min-speedup", type=float, default=0.0,
+                    help="fail (exit 1) if the 1%%-density compacted step "
+                         "is not this many times faster than dense")
+    args = ap.parse_args()
+    speedup = run()
+    write_json("frontier_density")
+    if args.min_speedup and speedup < args.min_speedup:
+        raise SystemExit(
+            f"frontier compaction regression: sparse-frontier speedup "
+            f"{speedup:.2f}x < required {args.min_speedup:.2f}x")
+
+
+if __name__ == "__main__":
+    main()

@@ -2,10 +2,12 @@
 correctness cost; on TPU these dispatch to the Pallas kernels).
 
 Emits the per-algebra frontier-relax rows future PRs track, a batched
-(B, ntiles, T) relax row, and the end-to-end multi-query batching win:
+(B, ntiles, T) relax row, the dense-vs-compacted frontier-density sweep
+(`bench_frontier_density`), and the end-to-end multi-query batching win:
 B=32 BFS sources on an LRN road network through one `run_batch` fixpoint
-vs 32 sequential `run()` calls on the same backend. Results land in
-BENCH_kernels.json via `common.write_json`.
+vs 32 sequential `run()` calls on the same backend. Results append to
+BENCH_kernels.json via `common.write_json` -- written even when a bench
+section fails, so the perf trajectory never silently loses a run.
 """
 from __future__ import annotations
 
@@ -15,7 +17,8 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from benchmarks.common import emit, timed, write_json
+from benchmarks import bench_frontier_density
+from benchmarks.common import RESULTS, emit, timed, write_json
 from repro.algebra import ALGEBRAS
 from repro.core.engine import FlipEngine
 from repro.graphs import make_dataset, make_road_network
@@ -59,6 +62,9 @@ def run():
     _, us = timed(lambda: fb(batt, batt).block_until_ready(), repeats=20)
     emit(f"kernel_frontier_relax_{size}_bfs_b32", us,
          f"batched B=32 edges={g.m} blocks={bg.blocks.shape[0]}")
+
+    # dense vs frontier-compacted streaming across frontier densities
+    bench_frontier_density.run(fast)
 
     bench_batching_win(fast)
 
@@ -105,8 +111,13 @@ def bench_batching_win(fast: bool):
 
 
 def main():
-    run()
-    write_json("kernels")
+    start = len(RESULTS)
+    try:
+        run()
+    finally:
+        # always persist this module's rows (even partial ones on a bench
+        # failure): BENCH_kernels.json is the recorded perf trajectory
+        write_json("kernels", rows=RESULTS[start:])
 
 
 if __name__ == "__main__":

@@ -1,9 +1,12 @@
 """Shared helpers for the benchmark harness.
 
 Every `emit` prints the historical ``name,us_per_call,derived`` CSV row
-AND records it in an in-process results list; `write_json(tag)` dumps the
-rows collected so far to ``BENCH_<tag>.json`` (under ``$BENCH_OUT`` if
-set, else the cwd), so CI can upload the perf trajectory as an artifact.
+AND records it in an in-process results list; `write_json(tag)` appends
+the rows collected so far as one run record to ``BENCH_<tag>.json``
+(under ``$BENCH_OUT`` if set, else the cwd). The file is append-safe --
+each invocation adds a ``{"ts", "rows"}`` entry to the ``runs`` list
+instead of overwriting history -- so repo-root files and CI artifacts
+accumulate the perf trajectory across runs.
 """
 from __future__ import annotations
 
@@ -29,12 +32,29 @@ def timed(fn, *args, repeats: int = 1, **kw):
     return out, (time.time() - t0) * 1e6 / repeats
 
 
-def write_json(tag: str) -> str:
-    """Dump everything emitted so far to BENCH_<tag>.json; returns path."""
+def write_json(tag: str, rows: list[dict] | None = None) -> str:
+    """Append one run record (`rows`, default: everything emitted so far)
+    to BENCH_<tag>.json; returns the path. Existing history -- including
+    the pre-append single-run {"rows": ...} layout -- is preserved."""
+    rows = RESULTS if rows is None else rows
     out_dir = os.environ.get("BENCH_OUT", ".")
     os.makedirs(out_dir, exist_ok=True)
     path = os.path.join(out_dir, f"BENCH_{tag}.json")
-    with open(path, "w") as f:
-        json.dump({"tag": tag, "rows": RESULTS}, f, indent=1)
-    print(f"[bench] wrote {len(RESULTS)} rows to {path}")
+    runs: list[dict] = []
+    if os.path.exists(path):
+        try:
+            with open(path) as f:
+                old = json.load(f)
+            runs = old.get("runs", [])
+            if "rows" in old:              # legacy overwrite-style layout
+                runs.insert(0, {"rows": old["rows"]})
+        except (json.JSONDecodeError, OSError):
+            pass                           # corrupt history: start fresh
+    runs.append({"ts": time.strftime("%Y-%m-%dT%H:%M:%S"), "rows": rows})
+    tmp = path + ".tmp"
+    with open(tmp, "w") as f:
+        json.dump({"tag": tag, "runs": runs}, f, indent=1)
+    os.replace(tmp, path)
+    print(f"[bench] appended {len(rows)} rows to {path} "
+          f"({len(runs)} recorded runs)")
     return path

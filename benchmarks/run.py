@@ -11,6 +11,11 @@ Prints ``name,us_per_call,derived`` CSV rows.
 
 Fast mode (default) uses reduced graph counts; FULL=1 uses paper-scale
 counts (100 graphs/group).
+
+Every invocation appends a run record to BENCH_all.json, and the kernel
+section always appends its rows to BENCH_kernels.json (written from
+`bench_kernels.main`'s finally-block, so a mid-bench failure still
+records the partial run).
 """
 from __future__ import annotations
 

@@ -67,15 +67,29 @@ class VertexAlgebra:
     # ------------------------------------------------------------------ #
     def edge_value(self, u: int, v: int, w: float,
                    outdeg: np.ndarray) -> float:
-        """The ⊗ operand stored for edge (u, v) of raw weight w."""
+        """The ⊗ operand stored for edge (u, v) of raw weight w (scalar
+        view of `edge_values`, so there is exactly one dispatch table).
+        Downstream consumers (tables/simulator) cast through float32 in
+        `message`, so the f32 production here loses nothing."""
+        return float(self.edge_values(np.asarray([u]), np.asarray([v]),
+                                      np.asarray([w], dtype=np.float32),
+                                      outdeg)[0])
+
+    def edge_values(self, u: np.ndarray, v: np.ndarray, w: np.ndarray,
+                    outdeg: np.ndarray) -> np.ndarray:
+        """Vectorized ⊗ operands over whole edge arrays (the block-build
+        hot path)."""
+        u = np.asarray(u)
         if self.weight_rule == "graph":
-            return float(w)
+            return np.asarray(w, dtype=np.float32)
         if self.weight_rule == "hop":
-            return 1.0
+            return np.ones(u.shape, dtype=np.float32)
         if self.weight_rule == "identity":
-            return float(self.semiring.one)
+            return np.full(u.shape, np.float32(self.semiring.one),
+                           dtype=np.float32)
         if self.weight_rule == "degree_damped":
-            return self.damping / float(outdeg[u])
+            return (self.damping /
+                    outdeg[u].astype(np.float64)).astype(np.float32)
         raise ValueError(f"unknown weight_rule {self.weight_rule!r}")
 
     # ------------------------------------------------------------------ #

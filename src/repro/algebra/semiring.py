@@ -47,7 +47,9 @@ class Semiring:
     name: str
     zero: float                 # ⊕-identity; absent edge / inactive lane
     one: float                  # ⊗-identity; source bootstrap value
-    add_np: Callable            # ⊕ elementwise, numpy
+    add_np: Callable            # ⊕ elementwise, numpy (a ufunc: build_blocks
+                                #   uses its `.at` for the edge scatter; a
+                                #   plain callable falls back to a slow loop)
     mul_np: Callable            # ⊗ elementwise, numpy
     add_jnp: Callable           # ⊕ elementwise, jnp
     mul_jnp: Callable           # ⊗ elementwise, jnp

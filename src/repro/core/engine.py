@@ -12,6 +12,19 @@ Two execution modes, matching the paper's dual-mode fabric (Sec. 3.4):
     sweep every step (Bellman-Ford / power-iteration style), no
     data-driven skipping.
 
+Data-centric mode additionally streams the weight blocks *compacted* by
+the runtime frontier (``compact``, default on for data mode): only blocks
+whose source tile is active for some query leave HBM; the rest are stood
+in for by one VMEM-resident sentinel block (see
+`repro.kernels.frontier.ops`). On the Pallas/interpret paths the
+compaction runs on-device inside the `while_loop` with static shapes; on
+the jnp/CPU path static shapes cannot shrink, so the fixpoint is driven
+from the host instead (`_fixpoint_host`) and each step runs a
+power-of-two-bucketed compacted relax -- the step cost tracks the live
+frontier, O(active·T²), instead of O(nb·T²). Compaction is exact (the
+⊕-identity annihilates ⊗), so results and step counts are bit-for-bit
+the dense-streaming ones.
+
 The algorithm is any registered `VertexAlgebra` (bfs, sssp, wcc,
 pagerank, widest, reach, ...): the engine itself only threads the
 algebra's scatter/carry/post-step hooks around the semiring relax kernel,
@@ -44,7 +57,8 @@ from jax.experimental.shard_map import shard_map
 from repro.algebra import VertexAlgebra
 from repro.core.mapping import Mapping
 from repro.graphs.csr import Graph
-from repro.kernels.frontier.ops import BlockedGraph, build_blocks, frontier_relax
+from repro.kernels.frontier.ops import (BlockedGraph, build_blocks,
+                                        frontier_relax, resolve_relax_mode)
 
 
 def mapping_order(mapping: Mapping) -> np.ndarray:
@@ -64,6 +78,8 @@ class FlipEngine:
     algo: str
     mode: str = "data"          # 'data' (FLIP) or 'op' (classic CGRA)
     relax_mode: str = "auto"    # kernel dispatch: auto/pallas/interpret/jnp
+    compact: bool | str = "auto"  # frontier-compacted block streaming:
+                                  # 'auto' = on for data mode, off for op
     max_steps: int = 100_000
 
     # -------------------------------------------------------------- #
@@ -71,15 +87,27 @@ class FlipEngine:
     def build(graph: Graph, algo: str | VertexAlgebra,
               mapping: Mapping | None = None,
               tile: int = 128, mode: str = "data",
-              relax_mode: str = "auto") -> "FlipEngine":
+              relax_mode: str = "auto",
+              compact: bool | str = "auto") -> "FlipEngine":
         order = mapping_order(mapping) if mapping is not None else None
         bg = build_blocks(graph, algo=algo, tile=tile, order=order)
         return FlipEngine(bg=bg, algo=bg.algebra.name, mode=mode,
-                          relax_mode=relax_mode)
+                          relax_mode=relax_mode, compact=compact)
 
     @property
     def algebra(self) -> VertexAlgebra:
         return self.bg.algebra
+
+    @property
+    def _use_compact(self) -> bool:
+        """Resolve the compaction policy: op-mode sweeps relax everything
+        by definition, so only data mode compacts by default."""
+        if self.compact == "auto":
+            return self.mode == "data"
+        return bool(self.compact)
+
+    def _resolved_relax_mode(self) -> str:
+        return resolve_relax_mode(self.relax_mode)
 
     # -------------------------------------------------------------- #
     def initial_state(self, srcs):
@@ -100,15 +128,34 @@ class FlipEngine:
         alg = self.algebra
         sv, carry = alg.scatter_carry_jnp(attrs, frontier,
                                           op_mode=(self.mode == "op"))
-        new = frontier_relax(sv, carry, self.bg, mode=self.relax_mode)
+        new = frontier_relax(sv, carry, self.bg, mode=self.relax_mode,
+                             compact=self._use_compact)
         return alg.post_step_jnp(attrs, aux, sv, new)
+
+    def _masked_step(self, attrs, aux, frontier, live):
+        """One relax step with the per-query convergence freeze applied:
+        queries whose frontier emptied (`live` (B,) bool) keep their
+        state untouched. The single body behind both fixpoint drivers,
+        so host-driven and while_loop runs stay bit-for-bit identical."""
+        attrs_n, aux_n, frontier_n = self._step(attrs, aux, frontier)
+        m = live[:, None, None]
+        return (jnp.where(m, attrs_n, attrs),
+                jnp.where(m, aux_n, aux),
+                jnp.logical_and(frontier_n, m))
 
     def _fixpoint(self, attrs0, aux0, frontier0):
         """Shared (B, ntiles, T) while_loop with per-query convergence
         masking: a query whose frontier emptied is frozen, so late
         queries in the batch cannot perturb finished ones (op-mode
         sweeps and residual aux accumulation would otherwise keep
-        touching them) and per-query step counts match solo runs."""
+        touching them) and per-query step counts match solo runs.
+
+        Compacted jnp streaming needs concrete frontiers (the active
+        block count picks the bucket size), which a traced while_loop
+        cannot provide -- that combination drives the same body from the
+        host instead."""
+        if self._use_compact and self._resolved_relax_mode() == "jnp":
+            return self._fixpoint_host(attrs0, aux0, frontier0)
 
         def cond(state):
             _, _, frontier, steps = state
@@ -118,17 +165,31 @@ class FlipEngine:
         def body(state):
             attrs, aux, frontier, steps = state
             live = frontier.any(axis=(1, 2))          # (B,) per query
-            attrs_n, aux_n, frontier_n = self._step(attrs, aux, frontier)
-            m = live[:, None, None]
-            return (jnp.where(m, attrs_n, attrs),
-                    jnp.where(m, aux_n, aux),
-                    jnp.logical_and(frontier_n, m),
-                    steps + live.astype(jnp.int32))
+            attrs, aux, frontier = self._masked_step(attrs, aux,
+                                                     frontier, live)
+            return attrs, aux, frontier, steps + live.astype(jnp.int32)
 
         steps0 = jnp.zeros(attrs0.shape[0], jnp.int32)
         attrs, aux, _, steps = jax.lax.while_loop(
             cond, body, (attrs0, aux0, frontier0, steps0))
         return attrs, aux, steps
+
+    def _fixpoint_host(self, attrs, aux, frontier):
+        """Host-driven fixpoint for compacted jnp streaming: identical
+        body semantics to the while_loop above (same live-mask freezing,
+        same step accounting -- bit-for-bit results), but each step reads
+        the concrete frontier so `frontier_relax` can bucket the
+        compacted block list and the step cost follows the live frontier
+        instead of the full block count."""
+        steps = np.zeros(attrs.shape[0], np.int32)
+        while True:
+            live = np.asarray(frontier.any(axis=(1, 2)))
+            if not live.any() or int(steps.max()) >= self.max_steps:
+                break
+            attrs, aux, frontier = self._masked_step(attrs, aux, frontier,
+                                                     jnp.asarray(live))
+            steps = steps + live.astype(np.int32)
+        return attrs, aux, jnp.asarray(steps)
 
     # -------------------------------------------------------------- #
     def run(self, src: int = 0):
@@ -162,6 +223,15 @@ class FlipEngine:
         cost amortizes over the batch. Works for every registered algebra
         in both 'data' and 'op' modes; a device whose slab holds only
         padded tiles owns zero real blocks and runs identity no-op blocks.
+
+        Because blocks are bdst-sorted, each device's slab is one
+        contiguous range of the block list, sliced directly from the
+        precomputed per-destination layout (`bg.dst_start`). In data mode
+        the per-device frontier compaction is the degenerate exact form:
+        a device none of whose local blocks has an active source returns
+        its carry without touching the weight slab (`lax.cond`), so
+        frontier locality idles whole devices just like FLIP's inactive
+        PE clusters.
         """
         if mesh is None:
             devs = np.array(jax.devices())
@@ -173,29 +243,36 @@ class FlipEngine:
         batched = bool(np.ndim(src))
         srcs = np.atleast_1d(np.asarray(src, dtype=np.int64))
 
-        # pad tiles to a multiple of ndev, then partition blocks by owner
+        # pad tiles to a multiple of ndev, then slice each device's block
+        # slab straight out of the bdst-sorted list via the precomputed
+        # per-destination layout (no per-block Python loop)
         ntiles_p = -(-bg.ntiles // ndev) * ndev
         bsrc, bdst = np.asarray(bg.bsrc), np.asarray(bg.bdst)
-        per_dev_blocks: list[list[int]] = [[] for _ in range(ndev)]
         tiles_per_dev = ntiles_p // ndev
-        for i, d in enumerate(bdst):
-            per_dev_blocks[d // tiles_per_dev].append(i)
+        bounds = np.minimum(np.arange(0, ntiles_p + 1, tiles_per_dev),
+                            bg.ntiles)
+        starts = np.asarray(bg.dst_start)[bounds]        # (ndev+1,)
         # >= 1 so a device owning zero blocks still gets a (1, T, T)
         # all-identity slab (exact no-op) instead of a zero-size array
-        max_nb = max(1, max(len(b) for b in per_dev_blocks))
+        max_nb = max(1, int(np.diff(starts).max()))
         t = bg.tile
         blocks_sh = np.full((ndev, max_nb, t, t), zero, dtype=np.float32)
         bsrc_sh = np.zeros((ndev, max_nb), dtype=np.int32)
         bdst_sh = np.zeros((ndev, max_nb), dtype=np.int32)
+        valid_sh = np.zeros((ndev, max_nb), dtype=bool)
         blocks_np = np.asarray(bg.blocks)
-        for dev, idxs in enumerate(per_dev_blocks):
-            for j, i in enumerate(idxs):
-                blocks_sh[dev, j] = blocks_np[i]
-                bsrc_sh[dev, j] = bsrc[i]
-                # destination indices local to the device slab
-                bdst_sh[dev, j] = bdst[i] - dev * tiles_per_dev
+        for dev in range(ndev):
+            s, e = int(starts[dev]), int(starts[dev + 1])
+            blocks_sh[dev, :e - s] = blocks_np[s:e]
+            bsrc_sh[dev, :e - s] = bsrc[s:e]
+            # destination indices local to the device slab
+            bdst_sh[dev, :e - s] = bdst[s:e] - dev * tiles_per_dev
+            valid_sh[dev, :e - s] = True
             # padding blocks (and the whole slab of a block-less device)
-            # keep bsrc/bdst 0 and all ⊕-identity entries = exact no-op
+            # keep bsrc/bdst 0 and all ⊕-identity entries = exact no-op;
+            # valid=False keeps them out of the idle-skip predicate (a
+            # padding slot's bsrc points at global tile 0, whose activity
+            # must not keep this device awake)
 
         attrs0, aux0, frontier0 = self.initial_state(srcs)
         pad = ntiles_p - bg.ntiles
@@ -205,19 +282,30 @@ class FlipEngine:
             aux0 = jnp.pad(aux0, ((0, 0), (0, pad), (0, 0)))
             frontier0 = jnp.pad(frontier0, ((0, 0), (0, pad), (0, 0)))
         op_mode = self.mode == "op"
+        skip_idle = self._use_compact
 
         @functools.partial(
             shard_map, mesh=mesh,
-            in_specs=(P(axis), P(axis), P(axis), P(None), P(None), P(None)),
+            in_specs=(P(axis), P(axis), P(axis), P(axis),
+                      P(None), P(None), P(None)),
             out_specs=(P(None), P(None), P(None)),
             check_rep=False)
-        def dist_fix(blocks, bsrc_l, bdst_l, attrs, aux, frontier):
-            blocks, bsrc_l, bdst_l = blocks[0], bsrc_l[0], bdst_l[0]
+        def dist_fix(blocks, bsrc_l, bdst_l, valid_l, attrs, aux, frontier):
+            blocks, bsrc_l, bdst_l, valid_l = (blocks[0], bsrc_l[0],
+                                               bdst_l[0], valid_l[0])
 
             def cond(state):
                 _, _, frontier, steps = state
                 return jnp.logical_and(frontier.any(),
                                        steps.max() < self.max_steps)
+
+            def relax_local(args):
+                svb, carry_local = args
+                cand = sr.add_reduce_jnp(
+                    sr.mul_jnp(svb[..., :, None], blocks), axis=-2)
+                best = jax.vmap(lambda c: sr.segment_reduce_jnp(
+                    c, bdst_l, tiles_per_dev))(cand)
+                return sr.add_jnp(carry_local, best)
 
             def body(state):
                 attrs, aux, frontier, steps = state
@@ -227,11 +315,21 @@ class FlipEngine:
                     carry, jax.lax.axis_index(axis) * tiles_per_dev,
                     tiles_per_dev, axis=1)
                 svb = sv[:, bsrc_l]                        # (B, nb, T)
-                cand = sr.add_reduce_jnp(
-                    sr.mul_jnp(svb[..., :, None], blocks), axis=-2)
-                best = jax.vmap(lambda c: sr.segment_reduce_jnp(
-                    c, bdst_l, tiles_per_dev))(cand)
-                new_local = sr.add_jnp(carry_local, best)
+                if skip_idle:
+                    # per-device frontier compaction, degenerate exact
+                    # form: no active source among the local *real*
+                    # blocks (any query) => the local relax is pure
+                    # ⊕-identity, so return the carry without touching
+                    # the weight slab. Padding slots are masked out --
+                    # their bsrc points at global tile 0, whose activity
+                    # must not keep an otherwise idle device awake.
+                    new_local = jax.lax.cond(
+                        jnp.any(jnp.logical_and(svb != zero,
+                                                valid_l[None, :, None])),
+                        relax_local, lambda args: args[1],
+                        (svb, carry_local))
+                else:
+                    new_local = relax_local((svb, carry_local))
                 new = jax.lax.all_gather(new_local, axis, axis=1,
                                          tiled=True)
                 attrs_n, aux_n, frontier_n = alg.post_step_jnp(
@@ -250,7 +348,7 @@ class FlipEngine:
         blocks_sh = jnp.asarray(blocks_sh)
         attrs_f, aux_f, steps = jax.jit(dist_fix)(
             blocks_sh, jnp.asarray(bsrc_sh), jnp.asarray(bdst_sh),
-            attrs0, aux0, frontier0)
+            jnp.asarray(valid_sh), attrs0, aux0, frontier0)
         out = self.algebra.finalize(attrs_f, aux_f)
         out = self.bg.to_orig(out[:, :bg.ntiles])
         steps = np.asarray(steps)

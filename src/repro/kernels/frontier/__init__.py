@@ -1,8 +1,11 @@
 from repro.kernels.frontier.ops import (
     frontier_relax,
     build_blocks,
+    compact_block_stream,
+    tile_activity,
     BlockedGraph,
 )
 from repro.kernels.frontier import ref
 
-__all__ = ["frontier_relax", "build_blocks", "BlockedGraph", "ref"]
+__all__ = ["frontier_relax", "build_blocks", "compact_block_stream",
+           "tile_activity", "BlockedGraph", "ref"]

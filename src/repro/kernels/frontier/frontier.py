@@ -12,15 +12,30 @@ delta-PageRank.
 
 The frontier bitmask plays FLIP's packet-trigger role: a block whose
 source tile holds only ⊕-identity lanes is skipped entirely (`pl.when`),
-so inactive regions cost (almost) nothing -- the kernel preserves the
-paper's "only active vertices scatter" property. Because the ⊕-identity
-annihilates ⊗, skipping such a block is exact, not approximate.
+so inactive regions cost (almost) no *compute* -- the kernel preserves
+the paper's "only active vertices scatter" property. Because the
+⊕-identity annihilates ⊗, skipping such a block is exact, not
+approximate.
+
+Compacted block streaming extends that skip to the *memory system*, where
+a memory-bound relax kernel actually spends its time: the block stream is
+indexed through a scalar-prefetched selection list ``bsel`` (see
+`ops.compact_block_stream`), whose active prefix names real blocks in
+(bdst, bsrc) order and whose inactive tail repeats one all-identity
+sentinel block index. The weight BlockSpec's index map reads ``bsel[i]``,
+so consecutive sentinel slots produce identical indices and the Pallas
+pipeline skips their copies -- the sentinel is fetched into VMEM once and
+every dead weight block stays in HBM. Per-step HBM traffic is therefore
+(active + 1)·T²·4 B instead of nb·T²·4 B; the sentinel slots still run
+the (T, T) VPU combine, but that compute is free under the memory bound.
+The dense path is the special case ``bsel = arange(nb)``.
 
 Block-sparsity replaces the Inter-/Intra-Tables: `bsrc/bdst` (scalar-
 prefetched, so index maps can read them) name the tile pair of each block;
 position inside the block is the DRF register. Blocks are sorted by
 destination tile so a destination's partial ⊕ accumulates in VMEM across
-consecutive grid steps (revisit-friendly "arbitrary" dimension semantics).
+consecutive grid steps (revisit-friendly "arbitrary" dimension semantics);
+a compacted stream preserves that order because the compaction is stable.
 
 Batched execution (serving-style multi-query workloads): the state is
 (B, ntiles, T) -- B independent queries over one shared block structure --
@@ -35,10 +50,11 @@ packet trigger is per query: block i is skipped for query b exactly when
 that query's source tile holds only ⊕-identity lanes.
 
 Layout: tile size T is a multiple of 128 (lane width). VMEM working set
-per step = T*T*4 B (block) + (2B+1)*T*4 B (per-query src vals, plus the
-B-row dst init and out slabs) -- e.g. 97 KiB for T=128, B=32, well inside
-the ~16 MiB VMEM budget; larger T=256/512 trades fewer grid steps against
-VMEM (ops.py picks T).
+per step = T*T*4 B (current block) + T*T*4 B (sentinel block, resident
+for the whole step when streaming compacted) + (2B+1)*T*4 B (per-query
+src vals, plus the B-row dst init and out slabs) -- e.g. 161 KiB for
+T=128, B=32, well inside the ~16 MiB VMEM budget; larger T=256/512
+trades fewer grid steps against VMEM (ops.py picks T).
 """
 from __future__ import annotations
 
@@ -59,8 +75,9 @@ def _make_relax_kernel(semiring: Semiring):
     add, mul = semiring.add_jnp, semiring.mul_jnp
     add_reduce = semiring.add_reduce_jnp
 
-    def _relax_kernel(bsrc_ref, bdst_ref, src_vals_ref, carry_ref,
+    def _relax_kernel(bsrc_ref, bdst_ref, bsel_ref, src_vals_ref, carry_ref,
                       block_ref, out_ref):
+        del bsel_ref                   # consumed by the block index map
         i = pl.program_id(0)           # weight block (outer: stays resident
         b = pl.program_id(1)           # query in the batch    while b spins)
         prev = bdst_ref[jnp.maximum(i - 1, 0)]
@@ -76,6 +93,9 @@ def _make_relax_kernel(semiring: Semiring):
         src_vals = src_vals_ref[0]     # (1, T) query b's source tile,
         # FLIP trigger rule, per query:  ⊕-identity where inactive
         # skip the block if none of this query's sources is active.
+        # (sentinel slots may still fire -- their all-identity block makes
+        # the merge an exact no-op, and the compute is free under the
+        # memory bound.)
         @pl.when(jnp.any(src_vals != zero))
         def _relax():
             w = block_ref[0]           # (T, T): w[s, d]
@@ -89,11 +109,12 @@ def _make_relax_kernel(semiring: Semiring):
 @functools.partial(jax.jit, static_argnames=("semiring", "interpret"))
 def frontier_relax_pallas(src_vals: jnp.ndarray,  # (B?, ntiles, T) f32
                           carry: jnp.ndarray,     # (B?, ntiles, T) f32
-                          blocks: jnp.ndarray,    # (nb, T, T) f32
-                          bsrc: jnp.ndarray,      # (nb,) i32, sorted by
-                          bdst: jnp.ndarray,      # (nb,) i32  (bdst, bsrc)
+                          blocks: jnp.ndarray,    # (nb[+1], T, T) f32
+                          bsrc: jnp.ndarray,      # (nslots,) i32, sorted by
+                          bdst: jnp.ndarray,      # (nslots,) i32 (bdst, bsrc)
                           semiring: Semiring = MIN_PLUS,
-                          interpret: bool = False) -> jnp.ndarray:
+                          interpret: bool = False,
+                          bsel: jnp.ndarray | None = None) -> jnp.ndarray:
     """One relaxation step: new[b, d] = carry[b, d] ⊕ (⊕_s sv[b, s] ⊗ W[s, d]).
 
     `src_vals`/`carry` are (ntiles, T) for one query or (B, ntiles, T) for
@@ -101,26 +122,35 @@ def frontier_relax_pallas(src_vals: jnp.ndarray,  # (B?, ntiles, T) f32
     result has the same shape. Destination tiles with no incident block
     keep their carry (callers ensure every tile has at least one block, or
     accept identity via the input_output_aliasing below).
+
+    `bsel` (optional, (nslots,) i32) streams the weight blocks through an
+    indirection: grid slot i fetches ``blocks[bsel[i]]``. Dense streaming
+    is ``bsel = None`` (identity). Compacted streaming passes the output
+    of `ops.compact_block_stream` together with the sentinel-extended
+    block array and the compacted `bsrc`/`bdst` slot coordinates.
     """
     squeeze = src_vals.ndim == 2
     if squeeze:
         src_vals, carry = src_vals[None], carry[None]
-    nb, t, _ = blocks.shape
+    t = blocks.shape[-1]
+    nslots = bsrc.shape[0]
+    if bsel is None:
+        bsel = jnp.arange(nslots, dtype=jnp.int32)
     batch, ntiles = carry.shape[0], carry.shape[1]
 
     grid_spec = pltpu.PrefetchScalarGridSpec(
-        num_scalar_prefetch=2,
-        grid=(nb, batch),
+        num_scalar_prefetch=3,
+        grid=(nslots, batch),
         in_specs=[
             pl.BlockSpec((1, 1, t),
-                         lambda i, b, bs, bd: (b, bs[i], 0)),    # src vals
+                         lambda i, b, bs, bd, sel: (b, bs[i], 0)),  # src vals
             pl.BlockSpec((batch, 1, t),
-                         lambda i, b, bs, bd: (0, bd[i], 0)),    # carry
+                         lambda i, b, bs, bd, sel: (0, bd[i], 0)),  # carry
             pl.BlockSpec((1, t, t),
-                         lambda i, b, bs, bd: (i, 0, 0)),        # block
+                         lambda i, b, bs, bd, sel: (sel[i], 0, 0)),  # block
         ],
         out_specs=pl.BlockSpec((batch, 1, t),
-                               lambda i, b, bs, bd: (0, bd[i], 0)),
+                               lambda i, b, bs, bd, sel: (0, bd[i], 0)),
     )
     kwargs = {}
     if not interpret:
@@ -130,8 +160,8 @@ def frontier_relax_pallas(src_vals: jnp.ndarray,  # (B?, ntiles, T) f32
         _make_relax_kernel(semiring),
         grid_spec=grid_spec,
         out_shape=jax.ShapeDtypeStruct((batch, ntiles, t), jnp.float32),
-        input_output_aliases={3: 0},   # alias carry -> out: untouched tiles
+        input_output_aliases={4: 0},   # alias carry -> out: untouched tiles
         interpret=interpret,           # keep their carry values
         **kwargs,
-    )(bsrc, bdst, src_vals, carry, blocks)
+    )(bsrc, bdst, bsel, src_vals, carry, blocks)
     return out[0] if squeeze else out

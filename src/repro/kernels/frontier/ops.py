@@ -6,10 +6,35 @@ placement minimizes cross-tile edges exactly like it minimizes NoC hops)
 into the block-sparse tile form the kernel consumes. The algorithm's
 `VertexAlgebra` decides the stored ⊗ operand per edge (`edge_value`) and
 the fill for absent edges (the semiring's ⊕-identity, so empty lanes drop
-out of every reduction).
+out of every reduction). The build is fully vectorized: one numpy
+key-sort + `ufunc.at` semiring scatter, no per-edge Python loop.
 
 `frontier_relax` dispatches: Pallas on TPU, Pallas-interpret when forced
 (tests), and a vectorized segment-reduce jnp fallback elsewhere (CPU).
+
+Frontier-compacted block streaming (``compact=True``): FLIP's headline
+win is that *inactive vertices cost nothing*, and on a memory-bound relax
+kernel that has to include the memory system, not just the ALUs. Each
+step we derive per-tile activity from the source values (a tile is active
+iff any lane differs from the ⊕-identity -- exactly the kernel's
+packet-trigger condition), map it onto the block list, and compact the
+active blocks to the front of a *fixed-size* index list with a masked
+cumsum + scatter (the list is pre-sorted by ``bdst``, so a stable
+compaction preserves the consecutive-visit accumulation order -- no sort
+at runtime). Inactive slots all point at one designated all-identity
+sentinel block (`BlockedGraph.blocks_ext`), so the Pallas index map
+re-fetches one tiny VMEM-resident block instead of streaming dead weight
+blocks: HBM traffic drops from O(nb·T²) to O(active·T²) + ε per step
+while every shape stays static (no recompiles). Because the ⊕-identity
+annihilates ⊗, the sentinel relax is an exact no-op, so compacted results
+are bit-for-bit the dense-streaming results.
+
+On the jnp/CPU path the same activity mask drives a gather of only the
+active blocks before the segment-⊕. Static shapes under `jit` cannot
+shrink, so when called with concrete (non-traced) arrays the active list
+is padded to the next power-of-two bucket -- at most log2(nb) specialized
+executables -- which is where the CPU fallback's asymptotic win comes
+from (`FlipEngine` drives its jnp fixpoint through this path).
 """
 from __future__ import annotations
 
@@ -37,6 +62,35 @@ class BlockedGraph:
     perm: np.ndarray            # original vertex id -> tiled position
     inv_perm: np.ndarray        # tiled position -> original vertex id
     algebra: VertexAlgebra = None
+    # (nb+1, T, T): `blocks` plus one trailing all-⊕-identity sentinel
+    # block. Compacted streaming points every inactive slot at index nb,
+    # so the sentinel is fetched once and stays VMEM-resident while the
+    # dead blocks it stands in for never leave HBM.
+    blocks_ext: jnp.ndarray = None
+    # (ntiles+1,) i32 per-destination segment layout: the blocks writing
+    # destination tile d occupy bdst-sorted positions
+    # dst_start[d]:dst_start[d+1]. Precomputed so runtime compaction is a
+    # masked cumsum/scatter (never a sort) and the distributed engine can
+    # slice per-device block slabs directly.
+    dst_start: np.ndarray = None
+    bsrc_np: np.ndarray = None  # host copy of bsrc for the per-step
+                                # bucketing path (avoids a device->host
+                                # conversion every fixpoint step)
+
+    def __post_init__(self):
+        # precompute eagerly (construction always happens on the host):
+        # materializing these lazily inside a trace would cache tracers
+        if self.blocks_ext is None and self.algebra is not None:
+            sentinel = jnp.full((1, self.tile, self.tile),
+                                np.float32(self.semiring.zero), jnp.float32)
+            self.blocks_ext = jnp.concatenate([self.blocks, sentinel],
+                                              axis=0)
+        if self.dst_start is None:
+            self.dst_start = np.searchsorted(
+                np.asarray(self.bdst),
+                np.arange(self.ntiles + 1)).astype(np.int32)
+        if self.bsrc_np is None:
+            self.bsrc_np = np.asarray(self.bsrc)
 
     @property
     def padded_n(self) -> int:
@@ -76,6 +130,12 @@ def build_blocks(graph: Graph, algo: str | VertexAlgebra = "sssp",
     'widest', 'reach', ...) or a `VertexAlgebra` directly. `order`:
     optional vertex ordering (e.g. from the FLIP mapping compiler);
     order[k] = original id of the vertex at tiled position k.
+
+    Fully vectorized: edges come straight out of the CSR arrays, the ⊗
+    operands from the algebra's vectorized `edge_values`, block ids from
+    one `np.unique` over (bdst, bsrc) keys (already the required sort
+    order), and parallel edges ⊕-combine through the semiring ufunc's
+    `.at` scatter -- no per-edge Python loop.
     """
     alg = algo if isinstance(algo, VertexAlgebra) else get_algebra(algo)
     sr = alg.semiring
@@ -87,33 +147,35 @@ def build_blocks(graph: Graph, algo: str | VertexAlgebra = "sssp",
 
     ntiles = max(1, -(-n // tile))
     outdeg = graph.out_degree()
-    edges = []
-    for u, v, w in graph.edge_list():
-        wval = alg.edge_value(u, v, w, outdeg)
-        edges.append((perm[u], perm[v], wval))
-        if alg.undirected:
-            edges.append((perm[v], perm[u], wval))
+    u = np.repeat(np.arange(n, dtype=np.int64), np.diff(graph.indptr))
+    v = graph.indices.astype(np.int64)
+    w = alg.edge_values(u, v, graph.weights, outdeg)
+    if alg.undirected:
+        u, v = np.concatenate([u, v]), np.concatenate([v, u])
+        w = np.concatenate([w, w])
+    pu, pv = perm[u], perm[v]
 
-    by_block: dict[tuple[int, int], list[tuple[int, int, float]]] = {}
-    for pu, pv, w in edges:
-        key = (pv // tile, pu // tile)     # (dst, src) for the sort
-        by_block.setdefault(key, []).append((pu % tile, pv % tile, w))
-
+    # block key = bdst * ntiles + bsrc: np.unique sorts by (bdst, bsrc),
+    # exactly the consecutive-destination-visit order the kernel needs.
     # every destination tile must appear at least once so its output block
-    # is initialized from the carry (all-identity blocks act as identity)
-    for d in range(ntiles):
-        by_block.setdefault((d, d), [])
+    # is initialized from the carry (all-identity blocks act as identity):
+    # the diagonal keys guarantee that.
+    key = (pv // tile) * ntiles + (pu // tile)
+    diag = np.arange(ntiles, dtype=np.int64) * (ntiles + 1)
+    uniq, inv = np.unique(np.concatenate([key, diag]), return_inverse=True)
+    nb = uniq.size
+    bdst = (uniq // ntiles).astype(np.int32)
+    bsrc = (uniq % ntiles).astype(np.int32)
 
-    keys = sorted(by_block)
-    nb = len(keys)
     blocks = np.full((nb, tile, tile), np.float32(sr.zero), dtype=np.float32)
-    bsrc = np.empty(nb, dtype=np.int32)
-    bdst = np.empty(nb, dtype=np.int32)
-    for i, (d, s) in enumerate(keys):
-        bdst[i], bsrc[i] = d, s
-        for su, dv, w in by_block[(d, s)]:
-            # parallel edges ⊕-combine (min for tropical, + for PageRank)
-            blocks[i, su, dv] = sr.add_np(blocks[i, su, dv], np.float32(w))
+    flat = blocks.reshape(-1)
+    lin = (inv[:key.size] * tile + pu % tile) * tile + pv % tile
+    w = w.astype(np.float32)
+    if hasattr(sr.add_np, "at"):           # parallel edges ⊕-combine
+        sr.add_np.at(flat, lin, w)
+    else:                                  # non-ufunc ⊕: slow exact path
+        for j, x in zip(lin, w):
+            flat[j] = sr.add_np(flat[j], x)
     return BlockedGraph(n=n, tile=tile, ntiles=ntiles,
                         blocks=jnp.asarray(blocks),
                         bsrc=jnp.asarray(bsrc), bdst=jnp.asarray(bdst),
@@ -122,8 +184,51 @@ def build_blocks(graph: Graph, algo: str | VertexAlgebra = "sssp",
 
 
 # --------------------------------------------------------------------- #
-# dispatching step op
+# frontier compaction: per-tile activity -> compacted block stream
 # --------------------------------------------------------------------- #
+def tile_activity(src_vals, semiring: Semiring):
+    """(…, ntiles, T) source values -> (ntiles,) bool per-tile activity.
+
+    A tile is active iff any of its lanes (for any query of the batch)
+    differs from the ⊕-identity -- the same condition as the kernel's
+    packet trigger, so a block whose source tile is inactive contributes
+    exactly nothing (the ⊕-identity annihilates ⊗) and may be dropped
+    from the stream without changing a single bit of the result.
+    """
+    act = jnp.any(src_vals != np.float32(semiring.zero), axis=-1)
+    if act.ndim > 1:                       # batched: active for any query
+        act = jnp.any(act, axis=tuple(range(act.ndim - 1)))
+    return act
+
+
+@jax.jit
+def compact_block_stream(tile_act, bsrc, bdst):
+    """Stable compaction of the active blocks to the front of a fixed-size
+    index list (masked cumsum + scatter -- never a sort: the list is
+    already (bdst, bsrc)-sorted and stability preserves that, keeping the
+    kernel's consecutive-destination accumulation semantics intact).
+
+    Returns ``(bsel, bsrc_c, bdst_c, n_active)``:
+      * bsel   (nb,) i32 -- slot i's index into ``blocks_ext``; slots
+        ``>= n_active`` hold the sentinel index nb.
+      * bsrc_c/bdst_c (nb,) i32 -- slot tile coordinates; inactive slots
+        repeat the last active block's pair (or block nb-1 when nothing is
+        active) so consecutive grid steps keep identical index-map
+        outputs and Pallas skips the re-fetch entirely.
+      * n_active -- traced active-block count.
+    """
+    nb = bsrc.shape[0]
+    act = jnp.take(tile_act, bsrc)
+    pos = jnp.cumsum(act.astype(jnp.int32)) - 1
+    n_active = jnp.sum(act.astype(jnp.int32))
+    sel = jnp.full((nb,), nb, dtype=jnp.int32)
+    sel = sel.at[jnp.where(act, pos, nb)].set(
+        jnp.arange(nb, dtype=jnp.int32), mode="drop")
+    last = jnp.minimum(sel[jnp.maximum(n_active - 1, 0)], nb - 1)
+    fill = jnp.where(jnp.arange(nb) < n_active, sel, last)
+    return (sel, jnp.take(bsrc, fill), jnp.take(bdst, fill), n_active)
+
+
 @functools.partial(jax.jit, static_argnames=("semiring",))
 def _relax_jnp(src_vals, carry, blocks, bsrc, bdst,
                semiring: Semiring = MIN_PLUS):
@@ -144,20 +249,102 @@ def _relax_jnp(src_vals, carry, blocks, bsrc, bdst,
     return semiring.add_jnp(carry, best)
 
 
-def frontier_relax(src_vals, carry, bg: BlockedGraph, mode: str = "auto"):
+@functools.partial(jax.jit, static_argnames=("semiring",))
+def _relax_jnp_compact(src_vals, carry, blocks_ext, bsrc, bdst, bsel,
+                       semiring: Semiring = MIN_PLUS):
+    """Compacted jnp relax: ⊗-combine + segment-⊕ over only the blocks
+    named by ``bsel`` (a prefix of active block ids padded with the
+    sentinel index nb). Sentinel rows gather the all-identity block, so
+    they contribute the ⊕-identity to their segment: bit-for-bit the
+    dense result, at O(len(bsel)·T²) instead of O(nb·T²).
+    """
+    ntiles = carry.shape[-2]
+    src_ix = jnp.take(bsrc, bsel, mode="clip")      # sentinel -> last block
+    seg_ix = jnp.take(bdst, bsel, mode="clip")
+    sv = jnp.take(src_vals, src_ix, axis=-2)             # (..., k, T)
+    w = jnp.take(blocks_ext, bsel, axis=0)               # (k, T, T)
+    cand = semiring.add_reduce_jnp(
+        semiring.mul_jnp(sv[..., :, None], w), axis=-2)  # (..., k, T)
+    def seg(x):
+        return semiring.segment_reduce_jnp(x, seg_ix, ntiles)
+    best = jax.vmap(seg)(cand) if cand.ndim == 3 else seg(cand)
+    return semiring.add_jnp(carry, best)
+
+
+_BUCKET_MIN = 8     # smallest compacted-list size: bounds executables at
+                    # ~log2(nb) buckets per (semiring, state shape)
+
+
+def _relax_jnp_bucketed(src_vals, carry, bg: "BlockedGraph"):
+    """Host-side compacted jnp step for concrete (non-traced) inputs: read
+    the active count, round it up to a power-of-two bucket, and run the
+    bucket-sized compacted relax. Falls back to the dense step when the
+    bucket would not be smaller than the full list."""
+    sr = bg.semiring
+    nb = int(bg.bsrc.shape[0])
+    act = np.asarray(tile_activity(src_vals, sr))[bg.bsrc_np]
+    idx = np.flatnonzero(act).astype(np.int32)
+    bucket = max(_BUCKET_MIN,
+                 1 << int(idx.size - 1).bit_length() if idx.size else 0)
+    if bucket >= nb:
+        return _relax_jnp(src_vals, carry, bg.blocks, bg.bsrc, bg.bdst,
+                          semiring=sr)
+    bsel = np.full(bucket, nb, dtype=np.int32)
+    bsel[:idx.size] = idx
+    return _relax_jnp_compact(src_vals, carry, bg.blocks_ext, bg.bsrc,
+                              bg.bdst, jnp.asarray(bsel), semiring=sr)
+
+
+def resolve_relax_mode(mode: str) -> str:
+    """The single 'auto' dispatch rule: Pallas on TPU, jnp elsewhere.
+    Shared with `FlipEngine` so the engine's host-fixpoint redirect can
+    never disagree with the kernel dispatch below."""
+    if mode == "auto":
+        return "pallas" if jax.default_backend() == "tpu" else "jnp"
+    return mode
+
+
+def frontier_relax(src_vals, carry, bg: BlockedGraph, mode: str = "auto",
+                   compact: bool = False):
     """One frontier relaxation step over a BlockedGraph.
 
     src_vals: (ntiles, T) f32 -- attrs where active, ⊕-identity where
               not -- or (B, ntiles, T) for a batch of B queries.
     carry:    same shape; values merged into every destination.
     mode: 'auto' | 'pallas' | 'interpret' | 'jnp'.
+    compact: frontier-compacted block streaming -- stream only blocks
+             with an active source tile (any query); exact (bit-for-bit
+             the dense result). On the pallas/interpret path the
+             compaction runs on-device with static shapes; on the jnp
+             path it buckets host-side, so under a trace (e.g. inside
+             `lax.while_loop`) it falls back to the dense step.
     """
     sr = bg.semiring
-    if mode == "auto":
-        mode = "pallas" if jax.default_backend() == "tpu" else "jnp"
+    mode = resolve_relax_mode(mode)
+    if mode == "pallas" and jax.default_backend() != "tpu":
+        raise ValueError(
+            f"frontier_relax(mode='pallas') needs a TPU backend, but "
+            f"jax.default_backend() is {jax.default_backend()!r}; use "
+            "mode='interpret' (Pallas interpreter, exact but slow) or "
+            "mode='jnp' (vectorized fallback)")
     if mode == "jnp":
-        return _relax_jnp(src_vals, carry, bg.blocks, bg.bsrc, bg.bdst,
-                          semiring=sr)
-    return frontier_relax_pallas(src_vals, carry, bg.blocks, bg.bsrc,
-                                 bg.bdst, semiring=sr,
-                                 interpret=(mode == "interpret"))
+        if not compact:
+            return _relax_jnp(src_vals, carry, bg.blocks, bg.bsrc, bg.bdst,
+                              semiring=sr)
+        if isinstance(src_vals, jax.core.Tracer):
+            # traced shapes cannot shrink: the dense step *is* the
+            # compacted stream's fixed-size upper bound, and it avoids a
+            # pointless full-width gather of blocks_ext
+            return _relax_jnp(src_vals, carry, bg.blocks, bg.bsrc, bg.bdst,
+                              semiring=sr)
+        return _relax_jnp_bucketed(src_vals, carry, bg)
+    interpret = mode == "interpret"
+    if not compact:
+        return frontier_relax_pallas(src_vals, carry, bg.blocks, bg.bsrc,
+                                     bg.bdst, semiring=sr,
+                                     interpret=interpret)
+    bsel, bsrc_c, bdst_c, _ = compact_block_stream(
+        tile_activity(src_vals, sr), bg.bsrc, bg.bdst)
+    return frontier_relax_pallas(src_vals, carry, bg.blocks_ext, bsrc_c,
+                                 bdst_c, semiring=sr, interpret=interpret,
+                                 bsel=bsel)

@@ -54,8 +54,13 @@ def main():
                     help="with --srcs: dispatch through the serving "
                          "front-end in fixed-size buckets of this many "
                          "queries (0 = one run_batch over all sources)")
+    ap.add_argument("--compact", default="auto",
+                    choices=["auto", "on", "off"],
+                    help="frontier-compacted block streaming for the "
+                         "jax/dist engines (auto = on for data mode)")
     ap.add_argument("--effort", type=int, default=1)
     args = ap.parse_args()
+    args.compact = {"auto": "auto", "on": True, "off": False}[args.compact]
 
     if args.engine == "op":            # deprecated pre-split spelling
         print("[graph] --engine op is deprecated; use "
@@ -105,14 +110,14 @@ def main():
                   f"vs op-centric CGRA {cgra.time_us / t_f:.1f}x")
     elif args.engine == "jax":
         eng = FlipEngine.build(g, args.algo, mapping=mapping,
-                               mode=args.mode)
+                               mode=args.mode, compact=args.compact)
         t0 = time.time()
         attrs, steps = eng.run(args.src)
         print(f"[graph] jax/{args.mode}: fixpoint in {steps} relaxation "
               f"steps ({time.time() - t0:.2f}s wall)")
     else:
         eng = FlipEngine.build(g, args.algo, mapping=mapping,
-                               mode=args.mode)
+                               mode=args.mode, compact=args.compact)
         attrs, steps = eng.run_distributed(args.src)
         print(f"[graph] dist/{args.mode}: fixpoint in {steps} steps "
               "over local device mesh")
@@ -127,7 +132,7 @@ def _run_batched(args, g, mapping, srcs) -> bool:
     if args.batch:
         from repro.launch.serve_graph import GraphServer
         srv = GraphServer(g, batch=args.batch, mode=args.mode,
-                          mapping=mapping)
+                          compact=args.compact, mapping=mapping)
         reqs = srv.serve((args.algo, s) for s in srcs)
         outs = [r.result for r in reqs]
         steps = [r.steps for r in reqs]
@@ -135,7 +140,7 @@ def _run_batched(args, g, mapping, srcs) -> bool:
                f"B={args.batch}")
     else:
         eng = FlipEngine.build(g, args.algo, mapping=mapping,
-                               mode=args.mode)
+                               mode=args.mode, compact=args.compact)
         run = (eng.run_distributed if args.engine == "dist"
                else eng.run_batch)
         outs, steps = run(np.asarray(srcs))

@@ -59,6 +59,10 @@ class GraphServer:
     tile: int = 128
     mode: str = "data"
     relax_mode: str = "auto"
+    compact: bool | str = "auto"  # frontier-compacted block streaming for
+                                  # every cached engine ('auto' = on for
+                                  # data mode); exact, so serving results
+                                  # stay bit-for-bit the solo runs
     mapping: object = None       # optional FLIP Mapping: placement-induced
                                  # block sparsity for every cached engine
 
@@ -77,7 +81,8 @@ class GraphServer:
             get_algebra(algo)        # fail fast on unknown algorithms
             self._engines[algo] = FlipEngine.build(
                 self.graph, algo, mapping=self.mapping, tile=self.tile,
-                mode=self.mode, relax_mode=self.relax_mode)
+                mode=self.mode, relax_mode=self.relax_mode,
+                compact=self.compact)
         return self._engines[algo]
 
     # ------------------------------------------------------------ #
@@ -134,6 +139,10 @@ def main():
     ap.add_argument("--batch", type=int, default=8)
     ap.add_argument("--tile", type=int, default=128)
     ap.add_argument("--mode", default="data", choices=["data", "op"])
+    ap.add_argument("--compact", default="auto",
+                    choices=["auto", "on", "off"],
+                    help="frontier-compacted block streaming (auto = on "
+                         "for data mode)")
     ap.add_argument("--seed", type=int, default=0)
     ap.add_argument("--check", action="store_true",
                     help="verify every response against the numpy oracle")
@@ -150,7 +159,9 @@ def main():
     stream = [(algos[int(rng.integers(len(algos)))],
                int(rng.integers(g.n))) for _ in range(args.requests)]
 
-    srv = GraphServer(g, batch=args.batch, tile=args.tile, mode=args.mode)
+    compact = {"auto": "auto", "on": True, "off": False}[args.compact]
+    srv = GraphServer(g, batch=args.batch, tile=args.tile, mode=args.mode,
+                      compact=compact)
     for a in algos:                      # build/compile outside the clock
         srv.engine(a)
     t0 = time.time()

@@ -1,0 +1,62 @@
+"""Benchmark persistence: BENCH_<tag>.json must accumulate run history
+(append-safe), survive the legacy single-run layout, and tolerate a
+corrupt file instead of losing the new rows."""
+import json
+
+from benchmarks import common
+
+
+def _fresh(monkeypatch, tmp_path):
+    monkeypatch.setenv("BENCH_OUT", str(tmp_path))
+    monkeypatch.setattr(common, "RESULTS", [])
+
+
+def test_write_json_appends_runs(tmp_path, monkeypatch):
+    _fresh(monkeypatch, tmp_path)
+    common.emit("row_a", 1.25, "first")
+    path = common.write_json("unittest")
+    common.emit("row_b", 2.5)
+    path2 = common.write_json("unittest")
+    assert path2 == path
+    with open(path) as f:
+        data = json.load(f)
+    assert data["tag"] == "unittest"
+    assert [len(r["rows"]) for r in data["runs"]] == [1, 2]
+    assert data["runs"][0]["rows"][0]["name"] == "row_a"
+    assert data["runs"][1]["rows"][1]["us_per_call"] == 2.5
+    assert all("ts" in r for r in data["runs"])
+
+
+def test_write_json_explicit_rows_subset(tmp_path, monkeypatch):
+    _fresh(monkeypatch, tmp_path)
+    common.emit("early", 1.0)
+    start = len(common.RESULTS)
+    common.emit("mine", 3.0)
+    path = common.write_json("subset", rows=common.RESULTS[start:])
+    with open(path) as f:
+        data = json.load(f)
+    assert [r["name"] for r in data["runs"][-1]["rows"]] == ["mine"]
+
+
+def test_write_json_migrates_legacy_layout(tmp_path, monkeypatch):
+    _fresh(monkeypatch, tmp_path)
+    legacy = {"tag": "unittest", "rows": [{"name": "old", "us_per_call": 9}]}
+    with open(tmp_path / "BENCH_unittest.json", "w") as f:
+        json.dump(legacy, f)
+    common.emit("new", 1.0)
+    path = common.write_json("unittest")
+    with open(path) as f:
+        data = json.load(f)
+    assert len(data["runs"]) == 2
+    assert data["runs"][0]["rows"][0]["name"] == "old"
+    assert data["runs"][1]["rows"][0]["name"] == "new"
+
+
+def test_write_json_survives_corrupt_history(tmp_path, monkeypatch):
+    _fresh(monkeypatch, tmp_path)
+    (tmp_path / "BENCH_unittest.json").write_text("{not json")
+    common.emit("fresh", 4.0)
+    path = common.write_json("unittest")
+    with open(path) as f:
+        data = json.load(f)
+    assert [r["name"] for r in data["runs"][-1]["rows"]] == ["fresh"]
