@@ -1,0 +1,123 @@
+"""Incremental-vs-scratch recompute cost after a streaming update batch.
+
+The compounding claim behind delta-driven recompute: after a small
+monotone mutation batch the resumed fixpoint relaxes only what the batch
+can improve, and with frontier-compacted streaming the tiny delta
+frontier fetches almost nothing -- so the step cost should collapse
+relative to a from-scratch rerun on the same post-update engine (same
+backend, same compiled executables).
+
+Measured here on an LRN-scale road network: converge SSSP once, halve
+the weights of a few random edges (⊕-improving, touching <=1% of the
+vertices), re-block incrementally, then time `run_updated` (warm start)
+against a from-scratch `run`. Both results are verified bit-identical
+before the clock starts. Rows are appended to **BENCH_kernels.json**
+(the recorded kernel perf trajectory):
+
+  incremental_sssp_<size>_scratch / _warm    wall us per recompute
+  incremental_sssp_<size>_speedup            scratch/warm wall ratio
+  incremental_sssp_<size>_step_reduction     scratch/warm fixpoint steps
+
+CI runs the fast (2k-vertex) configuration; `--min-speedup` turns the
+run into a regression guard.
+"""
+from __future__ import annotations
+
+import argparse
+import os
+
+import numpy as np
+
+from benchmarks.common import RESULTS, emit, timed, write_json
+from repro.core.engine import FlipEngine
+from repro.graphs import make_road_network
+
+
+def _monotone_edge_batch(g, rng, k: int):
+    """Shave 12.5% (a dyadic factor, so float relaxation stays exact)
+    off the weights of ~k edges clustered around one random vertex --
+    the shape of a real stream update (a localized traffic change), and
+    a pure ⊕-improving batch under (min, +). Undirected graphs mirror
+    each half-edge automatically."""
+    start = int(rng.integers(g.n))
+    seen, frontier, batch = {start}, [start], []
+    while frontier and len(batch) < k:
+        nxt = []
+        for u in frontier:
+            for v, w in zip(g.neighbors(u), g.edge_weights(u)):
+                if len(batch) >= k:
+                    break
+                batch.append((int(u), int(v), float(w) * 0.875))
+                if int(v) not in seen:
+                    seen.add(int(v))
+                    nxt.append(int(v))
+        frontier = nxt
+    return batch
+
+
+def run(fast: bool | None = None) -> float:
+    """Emit the incremental rows; returns the scratch/warm wall ratio."""
+    fast = bool(os.environ.get("BENCH_FAST")) if fast is None else fast
+    n = 2048 if fast else 16384                # full = ExtLRN scale
+    size = "2k" if fast else "16k"
+    g = make_road_network(n, seed=0, delete_frac=0.56)
+    rng = np.random.default_rng(0)
+    eng = FlipEngine.build(g, "sssp", tile=128)    # data mode, compacted
+    src = int(g.center_vertex())
+    prev, steps0 = eng.run(src)                # converge + warm the jit
+
+    # <=1% of vertices affected: k edges touch at most 2k sources
+    # (undirected mirroring makes both endpoints change out-edges)
+    k = max(1, n // 512)
+    batch = _monotone_edge_batch(g, rng, k)
+    g2 = g.apply_updates(batch)
+    eng2, delta = eng.apply_updates(g2, batch)
+    assert delta.monotone, "weight halving must be monotone under min-plus"
+    affected_pct = 100.0 * len(delta.affected_src) / n
+    assert affected_pct <= 1.0, affected_pct
+
+    out_w, steps_w = eng2.run_updated(src, prev, delta)
+    out_s, steps_s = eng2.run(src)
+    np.testing.assert_array_equal(out_w, out_s)    # exactness gate
+    steps_w = max(int(steps_w), 1)
+
+    repeats = 2 if fast else 3
+    _, us_w = timed(lambda: eng2.run_updated(src, prev, delta),
+                    repeats=repeats)
+    _, us_s = timed(lambda: eng2.run(src), repeats=repeats)
+    note = (f"road |V|={n} |E|={g2.m} {k} clustered edges reweighted, "
+            f"{len(delta.affected_src)} vertices affected "
+            f"({affected_pct:.2f}%)")
+    emit(f"incremental_sssp_{size}_scratch", us_s,
+         f"{note}, {int(steps_s)} steps")
+    emit(f"incremental_sssp_{size}_warm", us_w,
+         f"{note}, {steps_w} steps")
+    emit(f"incremental_sssp_{size}_speedup", us_s / us_w,
+         "scratch/warm wall ratio after a <=1%-vertex monotone batch "
+         "(x, higher is better)")
+    emit(f"incremental_sssp_{size}_step_reduction",
+         int(steps_s) / steps_w,
+         "scratch/warm relaxation-step ratio (x, higher is better)")
+    return us_s / us_w
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--min-speedup", type=float, default=0.0,
+                    help="fail (exit 1) if the warm recompute is not "
+                         "this many times faster than scratch")
+    args = ap.parse_args()
+    start = len(RESULTS)
+    try:
+        speedup = run()
+    finally:
+        # the incremental rows belong to the recorded kernel trajectory
+        write_json("kernels", rows=RESULTS[start:])
+    if args.min_speedup and speedup < args.min_speedup:
+        raise SystemExit(
+            f"incremental recompute regression: warm-start speedup "
+            f"{speedup:.2f}x < required {args.min_speedup:.2f}x")
+
+
+if __name__ == "__main__":
+    main()

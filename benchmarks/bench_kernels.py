@@ -17,7 +17,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from benchmarks import bench_frontier_density
+from benchmarks import bench_frontier_density, bench_incremental
 from benchmarks.common import RESULTS, emit, timed, write_json
 from repro.algebra import ALGEBRAS
 from repro.core.engine import FlipEngine
@@ -65,6 +65,9 @@ def run():
 
     # dense vs frontier-compacted streaming across frontier densities
     bench_frontier_density.run(fast)
+
+    # incremental-vs-scratch recompute after a streaming update batch
+    bench_incremental.run(fast)
 
     bench_batching_win(fast)
 

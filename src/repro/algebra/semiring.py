@@ -57,6 +57,28 @@ class Semiring:
     segment_reduce_jnp: Callable  # ⊕-reduction by segment id, jnp
     idempotent: bool            # x ⊕ x == x (min/max/or, not +)
 
+    def monotone_under(self, old_vals, new_vals) -> bool:
+        """Warm-start soundness hook for streaming graph updates.
+
+        `old_vals`/`new_vals` are the stored ⊗ operands of the touched
+        adjacency cells before and after an update batch, with the
+        ⊕-identity standing for an absent edge. Returns True iff every
+        new value ⊕-dominates its old value (``new ⊕ old == new``) --
+        i.e. the batch only inserts edges or moves weights in the
+        ⊕-improving direction. Under an idempotent ⊕ the relaxation
+        fixpoint is then monotone in the edge values, so a previous
+        fixpoint is a sound resume state: re-seeding only the touched
+        sources converges to exactly the from-scratch result. Edge
+        deletions / ⊕-worsening reweights (``old`` strictly dominating)
+        and non-idempotent ⊕ (re-relaxing would double-count, e.g.
+        (+,x) delta-PageRank) return False and require a full recompute.
+        """
+        if not self.idempotent:
+            return False
+        old = np.asarray(old_vals, dtype=np.float32)
+        new = np.asarray(new_vals, dtype=np.float32)
+        return bool(np.all(self.add_np(new, old) == new))
+
 def _segment_or(x, seg, num_segments):
     return jax.ops.segment_max(x, seg, num_segments=num_segments)
 

@@ -57,8 +57,27 @@ from jax.experimental.shard_map import shard_map
 from repro.algebra import VertexAlgebra
 from repro.core.mapping import Mapping
 from repro.graphs.csr import Graph
-from repro.kernels.frontier.ops import (BlockedGraph, build_blocks,
-                                        frontier_relax, resolve_relax_mode)
+from repro.kernels.frontier.ops import (BlockedGraph, UpdateDelta,
+                                        build_blocks, frontier_relax,
+                                        resolve_relax_mode)
+
+
+@dataclasses.dataclass
+class WarmStart:
+    """Resume state for delta-driven incremental recompute.
+
+    `attrs` is the converged result of a prior run on the pre-update
+    engine, in original vertex order: `(n,)` (applied to every query of
+    the batch) or `(B, n)` matching the batch. `seeds` holds the original
+    ids of the vertices whose out-edge ⊗ operands changed
+    (`UpdateDelta.affected_src`): they form the initial frontier, so the
+    fixpoint relaxes only what the update batch can actually improve and
+    converges in O(delta) steps instead of O(graph). Sound only for
+    monotone algebras under a `Semiring.monotone_under` update batch --
+    `FlipEngine.run_updated` applies that dispatch automatically.
+    """
+    attrs: np.ndarray
+    seeds: np.ndarray
 
 
 def mapping_order(mapping: Mapping) -> np.ndarray:
@@ -110,17 +129,39 @@ class FlipEngine:
         return resolve_relax_mode(self.relax_mode)
 
     # -------------------------------------------------------------- #
-    def initial_state(self, srcs):
+    def initial_state(self, srcs, warm: WarmStart | None = None):
         """(attrs, aux, frontier) as (B, ntiles, T) arrays for a batch of
         sources; padded lanes hold the ⊕-identity so they never activate
-        or contribute."""
+        or contribute.
+
+        With `warm`, the fixpoint resumes from a prior converged result
+        instead of the algebra's initial state: attrs come from
+        `warm.attrs` and only `warm.seeds` start active, so relaxation
+        propagates exactly the update batch's improvements."""
         bg, alg = self.bg, self.algebra
         srcs = np.atleast_1d(np.asarray(srcs, dtype=np.int64))
         b = srcs.shape[0]
-        attrs = bg.to_tiled(alg.initial_attrs(bg.n, srcs))
+        if warm is not None:
+            if alg.kind != "monotone":
+                raise ValueError(
+                    f"warm start needs a monotone algebra; {alg.name} is "
+                    f"{alg.kind!r} -- recompute from scratch instead")
+            prev = np.asarray(warm.attrs, dtype=np.float32)
+            if prev.ndim == 1:
+                prev = np.broadcast_to(prev, (b, bg.n))
+            if prev.shape != (b, bg.n):
+                raise ValueError(
+                    f"warm attrs shape {prev.shape} does not match "
+                    f"(B={b}, n={bg.n})")
+            attrs = bg.to_tiled(prev)
+            frontier = np.zeros((b, bg.padded_n), dtype=bool)
+            seeds = np.asarray(warm.seeds, dtype=np.int64)
+            frontier[:, bg.perm[seeds]] = True
+        else:
+            attrs = bg.to_tiled(alg.initial_attrs(bg.n, srcs))
+            frontier = np.zeros((b, bg.padded_n), dtype=bool)
+            frontier[:, bg.perm] = alg.initial_frontier(bg.n, srcs)
         aux = bg.to_tiled(np.zeros((b, bg.n), dtype=np.float32), fill=0.0)
-        frontier = np.zeros((b, bg.padded_n), dtype=bool)
-        frontier[:, bg.perm] = alg.initial_frontier(bg.n, srcs)
         return attrs, aux, jnp.asarray(
             frontier.reshape(b, bg.ntiles, bg.tile))
 
@@ -192,28 +233,64 @@ class FlipEngine:
         return attrs, aux, jnp.asarray(steps)
 
     # -------------------------------------------------------------- #
-    def run(self, src: int = 0):
+    def run(self, src: int = 0, warm: WarmStart | None = None):
         """Single-query fixpoint; returns the algebra's result vector in
-        original vertex order plus the number of relaxation steps taken."""
-        out, steps = self.run_batch([src])
+        original vertex order plus the number of relaxation steps taken.
+        `warm` resumes from a prior converged result (see `WarmStart`)."""
+        out, steps = self.run_batch([src], warm=warm)
         return out[0], int(steps[0])
 
-    def run_batch(self, srcs):
+    def run_batch(self, srcs, warm: WarmStart | None = None):
         """Batched fixpoint over B independent sources sharing one weight-
         block stream; returns ((B, n) results in original vertex order,
         (B,) per-query relaxation step counts). Each row is bit-for-bit
-        the corresponding `run(src)` result."""
-        attrs0, aux0, frontier0 = self.initial_state(srcs)
+        the corresponding `run(src)` result. `warm` resumes every query
+        from a prior converged result (see `WarmStart`)."""
+        attrs0, aux0, frontier0 = self.initial_state(srcs, warm=warm)
         attrs, aux, steps = self._fixpoint(attrs0, aux0, frontier0)
         return (self.bg.to_orig(self.algebra.finalize(attrs, aux)),
                 np.asarray(steps))
 
     # -------------------------------------------------------------- #
+    # streaming graph mutations: delta-driven incremental recompute
+    # -------------------------------------------------------------- #
+    def apply_updates(self, new_graph: Graph,
+                      updates) -> tuple["FlipEngine", "UpdateDelta"]:
+        """Incremental re-block after a mutation batch: `new_graph` is
+        the post-update Graph (``graph.apply_updates(updates)``). Only
+        the touched tiles are rebuilt (`BlockedGraph.apply_updates`);
+        value-only rebuilds keep every array shape, so the returned
+        engine hits the same compiled executables. Returns
+        ``(new_engine, delta)`` -- this engine is left untouched."""
+        bg2, delta = self.bg.apply_updates(new_graph, updates)
+        return dataclasses.replace(self, bg=bg2), delta
+
+    def run_updated(self, src, prev, delta: UpdateDelta):
+        """Recompute after `apply_updates`, incrementally when sound:
+        a `delta.monotone` batch resumes from `prev` (the converged
+        result of the same `src` query on the pre-update engine) with
+        only `delta.affected_src` seeded active; any other batch falls
+        back to a full from-scratch run. Either way the result is
+        bit-for-bit the from-scratch fixpoint on the updated graph.
+        `src`/`prev` follow `run`/`run_batch` shapes: a scalar source
+        with an `(n,)` result, or a sequence with a `(B, n)` result."""
+        batched = bool(np.ndim(src))
+        srcs = np.atleast_1d(np.asarray(src, dtype=np.int64))
+        warm = None
+        if delta.monotone and self.algebra.kind == "monotone":
+            warm = WarmStart(attrs=np.asarray(prev, dtype=np.float32),
+                             seeds=delta.affected_src)
+        out, steps = self.run_batch(srcs, warm=warm)
+        return (out, steps) if batched else (out[0], int(steps[0]))
+
+    # -------------------------------------------------------------- #
     def run_distributed(self, src=0, mesh: Mesh | None = None,
-                        axis: str = "data"):
+                        axis: str = "data", warm: WarmStart | None = None):
         """shard_map fixpoint: destination tiles sharded over `axis`,
         queries replicated; returns `(result, steps)` like `run` (batched
-        `(B, n)` / `(B,)` forms when `src` is a sequence).
+        `(B, n)` / `(B,)` forms when `src` is a sequence). `warm` resumes
+        from a prior converged result (see `WarmStart`), so incremental
+        recompute after a monotone update batch works distributed too.
 
         Each device owns a contiguous slab of destination tiles and the
         blocks that write them; per step it computes its slab's new attrs
@@ -274,7 +351,7 @@ class FlipEngine:
             # padding slot's bsrc points at global tile 0, whose activity
             # must not keep this device awake)
 
-        attrs0, aux0, frontier0 = self.initial_state(srcs)
+        attrs0, aux0, frontier0 = self.initial_state(srcs, warm=warm)
         pad = ntiles_p - bg.ntiles
         if pad:
             attrs0 = jnp.pad(attrs0, ((0, 0), (0, pad), (0, 0)),

@@ -7,6 +7,7 @@ The JAX engine re-blocks this into dense tile-pairs (see repro.core.engine).
 from __future__ import annotations
 
 import dataclasses
+import hashlib
 import numpy as np
 
 
@@ -16,12 +17,20 @@ class Graph:
 
     Undirected graphs are stored with both half-edges present (matching the
     paper's edge counts for road networks, which count directed half-edges).
+
+    Instances are treated as immutable: streaming mutations go through
+    `apply_updates`, which returns a NEW Graph with `version` bumped, so
+    downstream caches (blocked layouts, compiled engines) can tell graph
+    generations apart via `version` / `fingerprint()`.
     """
 
     indptr: np.ndarray   # (n+1,) int32
     indices: np.ndarray  # (m,)   int32  -- destination vertex of each edge
     weights: np.ndarray  # (m,)   float32
     directed: bool = True
+    version: int = 0     # bumped by every apply_updates
+    _fp: str | None = dataclasses.field(default=None, init=False,
+                                        repr=False, compare=False)
 
     # ------------------------------------------------------------------ #
     # construction
@@ -53,6 +62,83 @@ class Graph:
         return Graph(indptr=indptr, indices=indices, weights=w, directed=directed)
 
     # ------------------------------------------------------------------ #
+    # streaming mutations (versioned: always returns a new Graph)
+    # ------------------------------------------------------------------ #
+    def apply_updates(self, updates) -> "Graph":
+        """Apply a batch of edge mutations; returns a NEW Graph (this one
+        is never modified) with `version` bumped by one.
+
+        `updates` is an iterable of `(u, v, w)` triples: any float `w`
+        upserts the edge (inserts it if absent, overwrites its weight
+        otherwise), `w = None` deletes it (deleting an absent edge is a
+        no-op, so idempotent streams replay safely). `(u, v)` pairs are
+        accepted as shorthand for `(u, v, 1.0)`. Within one batch, later
+        entries win for the same `(u, v)`. Undirected graphs keep both
+        half-edges in sync automatically. The vertex set is fixed: an
+        endpoint outside `[0, n)` raises (grow the graph by building a
+        new one from edges).
+
+        Pass a *sequence*, not a one-shot iterator, when the same batch
+        is then replayed into `BlockedGraph`/`FlipEngine.apply_updates`
+        -- each call consumes the iterable once.
+        """
+        n = self.n
+        ops: dict[tuple[int, int], float | None] = {}
+        for upd in updates:
+            if len(upd) == 2:
+                (u, v), w = upd, 1.0
+            else:
+                u, v, w = upd
+            u, v = int(u), int(v)
+            if not (0 <= u < n and 0 <= v < n):
+                raise ValueError(
+                    f"edge update ({u}, {v}) is outside the fixed vertex "
+                    f"set [0, {n}); apply_updates cannot grow the graph")
+            w = None if w is None else float(w)
+            ops[(u, v)] = w
+            if not self.directed:
+                ops[(v, u)] = w
+
+        eu = self.edge_sources()
+        ev = self.indices.astype(np.int64)
+        if ops:
+            # drop every existing edge named by the batch, then append the
+            # surviving upserts and re-sort -- one vectorized pass, no
+            # per-edge Python over the untouched edges
+            ukey = np.asarray([u * n + v for (u, v) in ops],
+                              dtype=np.int64)
+            keep = ~np.isin(eu * n + ev, ukey)
+            ins = [(u, v, w) for (u, v), w in ops.items() if w is not None]
+            au = np.concatenate([eu[keep], np.asarray(
+                [e[0] for e in ins], dtype=np.int64)])
+            av = np.concatenate([ev[keep], np.asarray(
+                [e[1] for e in ins], dtype=np.int64)])
+            aw = np.concatenate([self.weights[keep], np.asarray(
+                [e[2] for e in ins], dtype=np.float32)])
+        else:
+            au, av, aw = eu, ev, self.weights
+        order = np.argsort(au * n + av, kind="stable")
+        au, av, aw = au[order], av[order], aw[order]
+        indptr = np.concatenate(
+            [[0], np.cumsum(np.bincount(au, minlength=n))]).astype(np.int32)
+        return Graph(indptr=indptr, indices=av.astype(np.int32),
+                     weights=aw.astype(np.float32), directed=self.directed,
+                     version=self.version + 1)
+
+    def fingerprint(self) -> str:
+        """Cheap content hash of the CSR arrays (+ version), cached on
+        first use. Because Graph instances are treated as immutable
+        (`apply_updates` returns a new one), the cache never goes stale;
+        engine caches key on this to detect graph swaps."""
+        if self._fp is None:
+            h = hashlib.blake2b(digest_size=16)
+            h.update(f"{self.n}|{self.version}|{self.directed}".encode())
+            for a in (self.indptr, self.indices, self.weights):
+                h.update(np.ascontiguousarray(a).tobytes())
+            self._fp = h.hexdigest()
+        return self._fp
+
+    # ------------------------------------------------------------------ #
     # basic accessors
     # ------------------------------------------------------------------ #
     @property
@@ -71,6 +157,12 @@ class Graph:
 
     def out_degree(self) -> np.ndarray:
         return np.diff(self.indptr)
+
+    def edge_sources(self) -> np.ndarray:
+        """(m,) int64 source vertex of each CSR edge (the expansion of
+        `indptr`, pairing with `indices`/`weights` positionally)."""
+        return np.repeat(np.arange(self.n, dtype=np.int64),
+                         np.diff(self.indptr))
 
     def edge_list(self):
         """Yield (u, v, w) triples."""

@@ -4,8 +4,9 @@ from repro.kernels.frontier.ops import (
     compact_block_stream,
     tile_activity,
     BlockedGraph,
+    UpdateDelta,
 )
 from repro.kernels.frontier import ref
 
 __all__ = ["frontier_relax", "build_blocks", "compact_block_stream",
-           "tile_activity", "BlockedGraph", "ref"]
+           "tile_activity", "BlockedGraph", "UpdateDelta", "ref"]

@@ -76,6 +76,9 @@ class BlockedGraph:
     bsrc_np: np.ndarray = None  # host copy of bsrc for the per-step
                                 # bucketing path (avoids a device->host
                                 # conversion every fixpoint step)
+    version: int = 0            # Graph.version this layout was built from
+    graph_fp: str = None        # Graph.fingerprint() of that graph, so
+                                # engine caches can detect stale layouts
 
     def __post_init__(self):
         # precompute eagerly (construction always happens on the host):
@@ -120,6 +123,193 @@ class BlockedGraph:
         flat = flat.reshape(flat.shape[:-2] + (-1,))
         return flat[..., self.perm]
 
+    # ------------------------------------------------------------------ #
+    # streaming mutations: rebuild only the touched tiles
+    # ------------------------------------------------------------------ #
+    def apply_updates(self, new_graph: Graph,
+                      updates) -> tuple["BlockedGraph", "UpdateDelta"]:
+        """Incremental re-block against `new_graph` (the post-update
+        Graph, i.e. ``graph.apply_updates(updates)``), reusing this
+        layout's vertex permutation and tiling.
+
+        Only the tile pairs touched by `updates` are recomputed, through
+        the same vectorized semiring `ufunc.at` scatter as `build_blocks`.
+        When every touched pair keeps a (non-empty) block, the update is
+        value-only: `bsrc`/`bdst` (and every shape) are reused unchanged,
+        so compiled relax executables keyed on them stay hot. A batch
+        that activates a previously empty tile pair appends blocks, and
+        one that empties an off-diagonal block drops it (diagonal blocks
+        always stay: they seed the carry); either way the key order is
+        re-sorted and `shape_changed=True`. The resulting layout is
+        always block-for-block identical to a from-scratch
+        `build_blocks` over `new_graph`, so layouts never accumulate
+        cruft across long mutation streams.
+
+        Returns ``(new_bg, delta)``; `delta` carries the per-algebra
+        warm-start verdict (`Semiring.monotone_under` over the changed
+        cells) and the affected source vertices that seed the resumed
+        frontier.
+        """
+        alg, sr, t, ntiles = self.algebra, self.semiring, self.tile, \
+            self.ntiles
+        if alg is None:
+            raise ValueError("BlockedGraph built without an algebra")
+        if new_graph.n != self.n:
+            raise ValueError(
+                f"apply_updates keeps the vertex set fixed: layout has "
+                f"n={self.n}, updated graph has n={new_graph.n}")
+        perm = self.perm
+
+        # dirty (u, v) endpoint pairs in every stored direction: the
+        # graph's own mirroring (undirected CSR) and the algebra's
+        # both-half-edges rule (WCC) each add the reverse pair
+        uu, vv = [], []
+        for upd in updates:
+            u, v = int(upd[0]), int(upd[1])
+            uu.append(u), vv.append(v)
+            if not new_graph.directed or alg.undirected:
+                uu.append(v), vv.append(u)
+        # degree-dependent ⊗ operands (delta-PageRank): a changed
+        # out-degree re-values every surviving out-edge of the source,
+        # so all of its tiles are dirty, not just the updated cell
+        if alg.weight_rule == "degree_damped":
+            for s in sorted(set(uu)):
+                for x in new_graph.neighbors(s):
+                    uu.append(s), vv.append(int(x))
+        u_arr = np.asarray(uu, dtype=np.int64)
+        v_arr = np.asarray(vv, dtype=np.int64)
+        pu, pv = perm[u_arr], perm[v_arr]
+        dkeys = np.unique((pv // t) * ntiles + (pu // t))
+        if dkeys.size == 0:                    # empty batch: version-only
+            new_bg = dataclasses.replace(
+                self, version=new_graph.version,
+                graph_fp=new_graph.fingerprint())
+            return new_bg, UpdateDelta(
+                monotone=sr.monotone_under([], []), shape_changed=False,
+                affected_src=np.zeros(0, dtype=np.int64),
+                n_blocks_rebuilt=0, version=new_graph.version)
+
+        # rebuild the dirty tiles from the new graph's edges -- the same
+        # key-sort + semiring-scatter path as build_blocks, restricted to
+        # edges that land in a dirty tile pair
+        eu = new_graph.edge_sources()
+        ev = new_graph.indices.astype(np.int64)
+        w = alg.edge_values(eu, ev, new_graph.weights,
+                            new_graph.out_degree())
+        if alg.undirected:
+            eu, ev = np.concatenate([eu, ev]), np.concatenate([ev, eu])
+            w = np.concatenate([w, w])
+        peu, pev = perm[eu], perm[ev]
+        ekey = (pev // t) * ntiles + (peu // t)
+        kpos = np.searchsorted(dkeys, ekey)
+        sel = np.flatnonzero(
+            (kpos < dkeys.size)
+            & (dkeys[np.minimum(kpos, dkeys.size - 1)] == ekey))
+        fresh = np.full((dkeys.size, t, t), np.float32(sr.zero),
+                        dtype=np.float32)
+        lin = (kpos[sel] * t + peu[sel] % t) * t + pev[sel] % t
+        _scatter_edges(sr, fresh.reshape(-1), lin,
+                       w[sel].astype(np.float32))
+
+        # old values of the same cells (⊕-identity where no block exists
+        # yet) drive the monotonicity verdict and the frontier seeds;
+        # only the dirty blocks are gathered from the device array --
+        # the full block tensor never round-trips through the host on
+        # the (common) value-only path
+        old_keys = (np.asarray(self.bdst, dtype=np.int64) * ntiles
+                    + np.asarray(self.bsrc, dtype=np.int64))
+        nb = old_keys.size
+        opos = np.searchsorted(old_keys, dkeys)
+        exists = ((opos < nb)
+                  & (old_keys[np.minimum(opos, nb - 1)] == dkeys))
+        opos_e = opos[exists]
+        old = np.full_like(fresh, np.float32(sr.zero))
+        if opos_e.size:
+            old[exists] = np.asarray(self.blocks[opos_e])
+        monotone = sr.monotone_under(old, fresh)
+
+        # affected sources: original ids of the lanes whose out-edge
+        # cells changed -- the warm-start frontier seed
+        changed_rows = (old != fresh).any(axis=2)        # (ndirty, t)
+        blk, row = np.nonzero(changed_rows)
+        pos = (dkeys[blk] % ntiles) * t + row            # tiled positions
+        pos = pos[pos < self.n]                          # drop padding
+        affected = np.unique(self.inv_perm[pos]).astype(np.int64)
+
+        fp = new_graph.fingerprint()
+        # keep the layout identical to a from-scratch build: a missing
+        # tile pair only grows the list if it actually gained edges (a
+        # delete of an absent edge stays a no-op), and an off-diagonal
+        # block emptied by deletions is dropped (diagonal blocks always
+        # stay -- they initialize the carry for their destination tile)
+        empty = ~(fresh != np.float32(sr.zero)).any(axis=(1, 2))
+        diag = (dkeys // ntiles) == (dkeys % ntiles)
+        grow = ~exists & ~empty
+        drop = exists & empty & ~diag
+        if not grow.any() and not drop.any():
+            upd = self.blocks
+            if opos_e.size:                # dirty tiles patched on device
+                upd = upd.at[opos_e].set(jnp.asarray(fresh[exists]))
+            new_bg = BlockedGraph(
+                n=self.n, tile=t, ntiles=ntiles,
+                blocks=upd, bsrc=self.bsrc, bdst=self.bdst,
+                perm=perm, inv_perm=self.inv_perm, algebra=alg,
+                dst_start=self.dst_start, bsrc_np=self.bsrc_np,
+                version=new_graph.version, graph_fp=fp)
+            shape_changed = False
+        else:
+            blocks = np.asarray(self.blocks).copy()
+            blocks[opos_e] = fresh[exists]
+            keep = np.ones(nb, dtype=bool)
+            keep[opos[drop]] = False
+            keys2 = np.concatenate([old_keys[keep], dkeys[grow]])
+            blocks2 = np.concatenate([blocks[keep], fresh[grow]])
+            order2 = np.argsort(keys2, kind="stable")
+            keys2 = keys2[order2]
+            new_bg = BlockedGraph(
+                n=self.n, tile=t, ntiles=ntiles,
+                blocks=jnp.asarray(blocks2[order2]),
+                bsrc=jnp.asarray((keys2 % ntiles).astype(np.int32)),
+                bdst=jnp.asarray((keys2 // ntiles).astype(np.int32)),
+                perm=perm, inv_perm=self.inv_perm, algebra=alg,
+                version=new_graph.version, graph_fp=fp)
+            shape_changed = True
+        delta = UpdateDelta(monotone=monotone, shape_changed=shape_changed,
+                            affected_src=affected,
+                            n_blocks_rebuilt=int(dkeys.size),
+                            version=new_graph.version)
+        return new_bg, delta
+
+
+@dataclasses.dataclass(frozen=True)
+class UpdateDelta:
+    """What one `BlockedGraph.apply_updates` batch did, and whether the
+    previous fixpoint may warm-start the recompute."""
+    monotone: bool            # every changed cell ⊕-improved under an
+                              # idempotent ⊕: resume from the old fixpoint
+    shape_changed: bool       # block list grew (empty tile pair
+                              # activated) or shrank (off-diagonal block
+                              # emptied): compiled fns keyed on the block
+                              # shapes will retrace
+    affected_src: np.ndarray  # original ids of sources whose out-edge
+                              # cells changed -- the warm frontier seed
+    n_blocks_rebuilt: int     # dirty tiles recomputed by this batch
+    version: int              # Graph.version the new layout tracks
+
+
+def _scatter_edges(sr: Semiring, flat: np.ndarray, lin: np.ndarray,
+                   w: np.ndarray) -> None:
+    """⊕-combine edge values into flattened block storage in place
+    (parallel edges merge through the semiring). Shared by the full
+    build and the incremental tile rebuild so the two can never drift:
+    the ufunc `.at` fast path, with a slow exact fallback for
+    non-ufunc ⊕."""
+    if hasattr(sr.add_np, "at"):
+        sr.add_np.at(flat, lin, w)
+    else:
+        for j, x in zip(lin, w):
+            flat[j] = sr.add_np(flat[j], x)
+
 
 def build_blocks(graph: Graph, algo: str | VertexAlgebra = "sssp",
                  tile: int = 128,
@@ -147,7 +337,7 @@ def build_blocks(graph: Graph, algo: str | VertexAlgebra = "sssp",
 
     ntiles = max(1, -(-n // tile))
     outdeg = graph.out_degree()
-    u = np.repeat(np.arange(n, dtype=np.int64), np.diff(graph.indptr))
+    u = graph.edge_sources()
     v = graph.indices.astype(np.int64)
     w = alg.edge_values(u, v, graph.weights, outdeg)
     if alg.undirected:
@@ -168,19 +358,14 @@ def build_blocks(graph: Graph, algo: str | VertexAlgebra = "sssp",
     bsrc = (uniq % ntiles).astype(np.int32)
 
     blocks = np.full((nb, tile, tile), np.float32(sr.zero), dtype=np.float32)
-    flat = blocks.reshape(-1)
     lin = (inv[:key.size] * tile + pu % tile) * tile + pv % tile
-    w = w.astype(np.float32)
-    if hasattr(sr.add_np, "at"):           # parallel edges ⊕-combine
-        sr.add_np.at(flat, lin, w)
-    else:                                  # non-ufunc ⊕: slow exact path
-        for j, x in zip(lin, w):
-            flat[j] = sr.add_np(flat[j], x)
+    _scatter_edges(sr, blocks.reshape(-1), lin, w.astype(np.float32))
     return BlockedGraph(n=n, tile=tile, ntiles=ntiles,
                         blocks=jnp.asarray(blocks),
                         bsrc=jnp.asarray(bsrc), bdst=jnp.asarray(bdst),
                         perm=perm, inv_perm=np.asarray(order),
-                        algebra=alg)
+                        algebra=alg, version=graph.version,
+                        graph_fp=graph.fingerprint())
 
 
 # --------------------------------------------------------------------- #

@@ -27,12 +27,13 @@ Examples:
 from __future__ import annotations
 
 import argparse
+import json
 import time
 
 import numpy as np
 
 from repro.core import (compile_mapping, simulate, PROGRAMS, baselines)
-from repro.core.engine import FlipEngine
+from repro.core.engine import FlipEngine, WarmStart
 from repro.graphs import make_dataset, reference
 
 
@@ -58,6 +59,14 @@ def main():
                     choices=["auto", "on", "off"],
                     help="frontier-compacted block streaming for the "
                          "jax/dist engines (auto = on for data mode)")
+    ap.add_argument("--updates", default=None, metavar="FILE",
+                    help="JSON file of streaming edge mutations: a list "
+                         "of [u, v, w] entries (w = null deletes, "
+                         "omitted w inserts with weight 1) or a list of "
+                         "such batches. Applied after the base query; "
+                         "each batch is re-solved incrementally (warm "
+                         "start when monotone under the algebra, full "
+                         "recompute otherwise). jax/dist engines only.")
     ap.add_argument("--effort", type=int, default=1)
     args = ap.parse_args()
     args.compact = {"auto": "auto", "on": True, "off": False}[args.compact]
@@ -74,6 +83,11 @@ def main():
     if args.batch and args.engine != "jax":
         raise SystemExit("--batch dispatches through the single-device "
                          "serving front-end; use it with --engine jax")
+    if args.updates and (args.engine not in ("jax", "dist")
+                         or srcs is not None):
+        raise SystemExit("--updates replays mutations through the "
+                         "incremental engines; use it with --engine "
+                         "jax/dist and a single --src")
 
     g = next(make_dataset(args.dataset, 1, seed0=args.graph_seed))
     print(f"[graph] {args.dataset}: |V|={g.n} |E|={g.m}")
@@ -88,7 +102,6 @@ def main():
         print(f"[graph] correct vs reference: {ok}")
         return
 
-    ref, _ = reference.run(args.algo, g, args.src)
     if args.engine == "sim":
         if not PROGRAMS[args.algo].sim_ok:
             raise SystemExit(
@@ -122,8 +135,62 @@ def main():
         print(f"[graph] dist/{args.mode}: fixpoint in {steps} steps "
               "over local device mesh")
 
+    if args.updates:
+        g, attrs = _replay_updates(args, g, eng, attrs)
+
+    ref, _ = reference.run(args.algo, g, args.src)
     print(f"[graph] correct vs reference: "
           f"{PROGRAMS[args.algo].results_match(attrs, ref)}")
+
+
+def _load_update_batches(path):
+    """JSON `--updates` file: a single batch (list of [u, v, w?] entries,
+    w = null deletes, omitted w = 1.0) or a list of such batches."""
+    with open(path) as f:
+        data = json.load(f)
+
+    def is_update(e):
+        return (isinstance(e, list) and 2 <= len(e) <= 3
+                and all(isinstance(x, (int, float)) for x in e[:2])
+                and (len(e) == 2 or e[2] is None
+                     or isinstance(e[2], (int, float))))
+
+    if not isinstance(data, list) or not data:
+        raise SystemExit("--updates: JSON must be a non-empty list")
+    if all(is_update(e) for e in data):        # one flat batch
+        data = [data]
+    elif not all(isinstance(b, list) and all(is_update(e) for e in b)
+                 for b in data):
+        raise SystemExit(
+            "--updates: entries must be [u, v] / [u, v, w] / [u, v, null]"
+            " triples, or a list of batches of them")
+    return [[(int(e[0]), int(e[1]),
+              (1.0 if len(e) < 3 else
+               (None if e[2] is None else float(e[2]))))
+             for e in batch] for batch in data]
+
+
+def _replay_updates(args, g, eng, attrs):
+    """Apply each update batch and re-solve incrementally: warm start
+    from the previous fixpoint when the batch is monotone under the
+    algebra, full recompute otherwise."""
+    for i, batch in enumerate(_load_update_batches(args.updates)):
+        g = g.apply_updates(batch)
+        t0 = time.time()
+        eng, delta = eng.apply_updates(g, batch)
+        if args.engine == "dist":
+            warm = (WarmStart(attrs, delta.affected_src)
+                    if delta.monotone else None)
+            attrs, steps = eng.run_distributed(args.src, warm=warm)
+        else:
+            attrs, steps = eng.run_updated(args.src, attrs, delta)
+        print(f"[graph] update[{i}]: {len(batch)} edges -> "
+              f"{delta.n_blocks_rebuilt} tiles rebuilt"
+              f"{' (shape changed)' if delta.shape_changed else ''}, "
+              f"{'warm' if delta.monotone else 'full'} recompute in "
+              f"{steps} steps ({time.time() - t0:.2f}s, "
+              f"{len(delta.affected_src)} vertices affected)")
+    return g, attrs
 
 
 def _run_batched(args, g, mapping, srcs) -> bool:

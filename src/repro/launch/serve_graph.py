@@ -17,10 +17,20 @@ one cached compiled engine per (algebra, mode):
     (run_batch's per-query convergence mask guarantees bit-for-bit
     equality).
 
+Streaming mutations interleave with queries: `update(batch)` (or an
+``("update", batch)`` stream item) drains the pending buckets against the
+pre-update graph -- submission order is also graph-version order -- then
+rebuilds every cached engine incrementally through
+`BlockedGraph.apply_updates`. Value-only rebuilds keep all array shapes,
+so the compiled relax executables stay hot; only a batch that activates a
+previously empty tile pair retraces. The engine cache is keyed by the
+graph's content fingerprint, so a wholesale `graph` swap (not just
+`update`) also invalidates it instead of silently serving stale results.
+
 CLI demo (synthetic request stream over one dataset graph):
 
   PYTHONPATH=src python -m repro.launch.serve_graph --dataset LRN \
-      --algos bfs,sssp,pagerank --requests 64 --batch 8
+      --algos bfs,sssp,pagerank --requests 64 --batch 8 --updates 4
 """
 from __future__ import annotations
 
@@ -72,18 +82,48 @@ class GraphServer:
         self._next_id = 0
         self.dispatches = 0
         self.completed = 0
+        self.updates_applied = 0
 
     # ------------------------------------------------------------ #
     def engine(self, algo: str) -> FlipEngine:
         """Compiled-engine cache: block build + jit executables are paid
-        once per algebra, then shared by every batch."""
-        if algo not in self._engines:
+        once per algebra, then shared by every batch. Keyed by the
+        graph's content fingerprint, not just the algorithm: a cached
+        engine whose layout was built from a different graph (wholesale
+        `srv.graph` swap, mutation applied behind the server's back) is
+        rebuilt instead of silently serving the old graph's results."""
+        fp = self.graph.fingerprint()
+        eng = self._engines.get(algo)
+        if eng is None or eng.bg.graph_fp != fp:
             get_algebra(algo)        # fail fast on unknown algorithms
             self._engines[algo] = FlipEngine.build(
                 self.graph, algo, mapping=self.mapping, tile=self.tile,
                 mode=self.mode, relax_mode=self.relax_mode,
                 compact=self.compact)
         return self._engines[algo]
+
+    # ------------------------------------------------------------ #
+    def update(self, updates) -> dict:
+        """Apply one edge-mutation batch between queries.
+
+        Pending buckets are drained first, so every already-submitted
+        query runs against the graph version current at its submission.
+        Each cached engine is then re-blocked incrementally
+        (`FlipEngine.apply_updates`): only the touched tiles are
+        recomputed, and value-only rebuilds reuse every compiled
+        executable (shapes unchanged) -- only a shape-changing rebuild
+        (previously empty tile pair activated) retraces on its next
+        dispatch. Returns the per-algebra `UpdateDelta`s."""
+        self.drain()
+        updates = list(updates)    # consumed once per cached engine
+        g2 = self.graph.apply_updates(updates)
+        deltas = {}
+        for algo, eng in list(self._engines.items()):
+            self._engines[algo], deltas[algo] = eng.apply_updates(
+                g2, updates)
+        self.graph = g2
+        self.updates_applied += 1
+        return deltas
 
     # ------------------------------------------------------------ #
     def submit(self, algo: str, src: int) -> GraphRequest:
@@ -104,9 +144,17 @@ class GraphServer:
                 self._dispatch(algo)
 
     def serve(self, stream) -> list[GraphRequest]:
-        """Convenience: run a whole iterable of (algo, src) requests and
-        return them completed, in submission order."""
-        reqs = [self.submit(algo, src) for algo, src in stream]
+        """Convenience: run a whole iterable of requests and return the
+        queries completed, in submission order. Items are ``(algo, src)``
+        queries or ``("update", batch)`` mutations; an update drains the
+        queries submitted before it (they see the pre-update graph) and
+        every later query runs against the mutated graph."""
+        reqs = []
+        for algo, arg in stream:
+            if algo == "update":
+                self.update(arg)
+            else:
+                reqs.append(self.submit(algo, arg))
         self.drain()
         return reqs
 
@@ -128,6 +176,18 @@ class GraphServer:
 # ----------------------------------------------------------------- #
 # CLI demo: synthetic request stream over one Table-4 dataset graph
 # ----------------------------------------------------------------- #
+def _random_update_batch(g, rng, k: int = 4):
+    """Small mutation batch for the demo stream: ⊕-improving reweights
+    (halved weights) of k random existing edges plus one random insert."""
+    eu = g.edge_sources()
+    idx = rng.choice(g.m, size=min(k, g.m), replace=False)
+    batch = [(int(eu[i]), int(g.indices[i]), float(g.weights[i]) * 0.5)
+             for i in idx]
+    batch.append((int(rng.integers(g.n)), int(rng.integers(g.n)),
+                  float(rng.integers(1, 9))))
+    return batch
+
+
 def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--dataset", default="LRN",
@@ -136,6 +196,10 @@ def main():
     ap.add_argument("--algos", default="bfs,sssp,pagerank",
                     help="comma list of registered algebras to sample")
     ap.add_argument("--requests", type=int, default=64)
+    ap.add_argument("--updates", type=int, default=0,
+                    help="interleave this many random edge-update batches "
+                         "into the stream; queries after an update run "
+                         "against the mutated graph")
     ap.add_argument("--batch", type=int, default=8)
     ap.add_argument("--tile", type=int, default=128)
     ap.add_argument("--mode", default="data", choices=["data", "op"])
@@ -156,8 +220,21 @@ def main():
           f"algos={algos} B={args.batch}")
 
     rng = np.random.default_rng(args.seed)
-    stream = [(algos[int(rng.integers(len(algos)))],
-               int(rng.integers(g.n))) for _ in range(args.requests)]
+    # interleave update batches at evenly spaced stream positions; track
+    # the graph version each query will be dispatched against so --check
+    # verifies every response against the right oracle snapshot
+    update_at = (set(np.linspace(1, args.requests - 1, args.updates,
+                                 dtype=int).tolist())
+                 if args.updates else set())
+    stream, snapshots, g_cur = [], [], g
+    for i in range(args.requests):
+        if i in update_at:
+            batch = _random_update_batch(g_cur, rng)
+            stream.append(("update", batch))
+            g_cur = g_cur.apply_updates(batch)
+        stream.append((algos[int(rng.integers(len(algos)))],
+                       int(rng.integers(g.n))))
+        snapshots.append(g_cur)
 
     compact = {"auto": "auto", "on": True, "off": False}[args.compact]
     srv = GraphServer(g, batch=args.batch, tile=args.tile, mode=args.mode,
@@ -170,11 +247,12 @@ def main():
     assert all(r.done for r in reqs)
     print(f"[serve] {len(reqs)} requests in {wall:.2f}s "
           f"({len(reqs) / wall:.1f} req/s) over {srv.dispatches} "
-          f"dispatches of B={args.batch}")
+          f"dispatches of B={args.batch}, {srv.updates_applied} update "
+          f"batches applied")
     if args.check:
         bad = 0
-        for r in reqs:
-            ref, _ = reference.run(r.algo, g, r.src)
+        for r, g_snap in zip(reqs, snapshots):
+            ref, _ = reference.run(r.algo, g_snap, r.src)
             bad += not ALGEBRAS[r.algo].results_match(r.result, ref)
         print(f"[serve] oracle check: {len(reqs) - bad}/{len(reqs)} correct")
         if bad:

@@ -17,26 +17,14 @@ separate multi-tile case exercises the block-sparse bsrc/bdst path.
 import jax
 import numpy as np
 import pytest
+from conftest import ALGOS, SIM_ALGOS, assert_close as _assert_close, \
+    tpu_only
 
-from repro.algebra import ALGEBRAS, VertexAlgebra, get_algebra
+from repro.algebra import ALGEBRAS, get_algebra
 from repro.core import PROGRAMS, compile_mapping, simulate
 from repro.core.engine import FlipEngine
 from repro.graphs import (make_power_law, make_road_network, make_synthetic,
                           reference)
-
-ALGOS = sorted(ALGEBRAS)
-SIM_ALGOS = [a for a in ALGOS if ALGEBRAS[a].sim_ok]
-
-
-_finite = VertexAlgebra.finite   # shared ±inf-sentinel mapping
-
-
-def _assert_close(got, ref, algo, msg=""):
-    alg = ALGEBRAS.get(algo)
-    atol = alg.atol if alg is not None else 1e-6
-    assert np.allclose(_finite(got), _finite(ref), atol=atol), \
-        f"{algo} {msg}: max|d|=" \
-        f"{np.abs(_finite(got) - _finite(ref)).max()}"
 
 
 def _graphs20():
@@ -111,9 +99,7 @@ def test_pagerank_mass_conservation():
     assert 0.0 < float(np.sum(got)) <= 1.0 + 1e-4
 
 
-@pytest.mark.skipif(jax.default_backend() != "tpu",
-                    reason="compiled Pallas path is TPU-only; CPU covers "
-                           "the same kernel body via interpret mode")
+@tpu_only
 @pytest.mark.parametrize("algo", ALGOS)
 def test_pallas_compiled_matches_oracle(algo):
     g = make_synthetic(120, 360, seed=1)

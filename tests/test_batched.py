@@ -9,27 +9,12 @@ dispatch + tail padding on top and must preserve the same guarantee.
 """
 import numpy as np
 import pytest
+from conftest import ALGOS, SRCS8, check_batch as _check_batch
 
 from repro.algebra import ALGEBRAS
 from repro.core.engine import FlipEngine
 from repro.graphs import make_power_law, make_synthetic, reference
 from repro.launch.serve_graph import GraphServer
-
-ALGOS = sorted(ALGEBRAS)
-SRCS8 = np.array([3, 11, 0, 27, 42, 8, 19, 33])     # B=8 fixed seeds
-
-
-def _check_batch(eng, g, srcs, algo):
-    outs, steps = eng.run_batch(srcs)
-    assert outs.shape == (len(srcs), g.n)
-    assert steps.shape == (len(srcs),)
-    for b, s in enumerate(srcs):
-        solo_out, solo_steps = eng.run(int(s))
-        # bit-for-bit: the batch row IS the solo run
-        np.testing.assert_array_equal(outs[b], solo_out)
-        assert steps[b] == solo_steps
-        ref, _ = reference.run(algo, g, int(s))
-        assert ALGEBRAS[algo].results_match(outs[b], ref), (algo, b)
 
 
 @pytest.mark.parametrize("mode", ["data", "op"])

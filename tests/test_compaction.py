@@ -8,10 +8,11 @@ registered algebra, on the jnp fallback and the Pallas-interpret kernel,
 solo and batched, including the all-inactive and all-active frontier edge
 cases and destinations kept alive only by their carry.
 """
-import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
+from conftest import (ALGOS, cpu_only, masked_src_vals as _src_vals,
+                      tiled_state)
 
 from repro.algebra import ALGEBRAS, get_algebra
 from repro.core.engine import FlipEngine
@@ -19,7 +20,6 @@ from repro.graphs import Graph, make_power_law, make_synthetic, reference
 from repro.kernels.frontier import (build_blocks, compact_block_stream,
                                     frontier_relax, tile_activity)
 
-ALGOS = sorted(ALGEBRAS)
 # named frontier densities; "edge" cases required by the compaction
 # contract: all-inactive (everything sentinel) and all-active (compaction
 # degenerates to the dense stream)
@@ -27,23 +27,7 @@ DENSITIES = ("none", "tile0", 0.5, "all")
 
 
 def _state(bg, rng, batch):
-    shape = (batch, bg.n) if batch else (bg.n,)
-    vals = rng.uniform(0.5, 9, shape).astype(np.float32)
-    return bg.to_tiled(vals)
-
-
-def _src_vals(bg, attrs, rng, density):
-    if density == "none":
-        mask = np.zeros(attrs.shape, dtype=bool)
-    elif density == "all":
-        mask = np.ones(attrs.shape, dtype=bool)
-    elif density == "tile0":                    # one active source tile
-        mask = np.zeros(attrs.shape, dtype=bool)
-        mask[..., 0, :] = True
-    else:
-        mask = rng.random(attrs.shape) < density
-    return jnp.where(jnp.asarray(mask), attrs,
-                     np.float32(bg.semiring.zero))
+    return tiled_state(bg, rng, batch)
 
 
 @pytest.mark.parametrize("batch", [0, 32], ids=["solo", "b32"])
@@ -186,13 +170,12 @@ def test_compact_auto_resolution():
                                 compact=False)._use_compact
 
 
-@pytest.mark.skipif(jax.default_backend() == "tpu",
-                    reason="pallas mode is the real path on TPU")
+@cpu_only
 def test_pallas_mode_off_tpu_raises_clear_error():
     g = make_synthetic(20, 50, seed=0)
     bg = build_blocks(g, "bfs", tile=8)
     attrs = _state(bg, np.random.default_rng(0), 0)
-    with pytest.raises(ValueError, match=jax.default_backend()):
+    with pytest.raises(ValueError, match="needs a TPU backend"):
         frontier_relax(attrs, attrs, bg, mode="pallas")
 
 
