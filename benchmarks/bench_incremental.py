@@ -9,8 +9,9 @@ backend, same compiled executables).
 
 Measured here on an LRN-scale road network: converge SSSP once, halve
 the weights of a few random edges (⊕-improving, touching <=1% of the
-vertices), re-block incrementally, then time `run_updated` (warm start)
-against a from-scratch `run`. Both results are verified bit-identical
+vertices), step the session with `CompiledQuery.update`, then time the
+warm-started `query(src, warm=prev)` against a from-scratch
+`query(src)`. Both results are verified bit-identical
 before the clock starts. Rows are appended to **BENCH_kernels.json**
 (the recorded kernel perf trajectory):
 
@@ -29,7 +30,7 @@ import os
 import numpy as np
 
 from benchmarks.common import RESULTS, emit, timed, write_json
-from repro.core.engine import FlipEngine
+from repro import api as flip
 from repro.graphs import make_road_network
 
 
@@ -62,30 +63,32 @@ def run(fast: bool | None = None) -> float:
     size = "2k" if fast else "16k"
     g = make_road_network(n, seed=0, delete_frac=0.56)
     rng = np.random.default_rng(0)
-    eng = FlipEngine.build(g, "sssp", tile=128)    # data mode, compacted
+    # data mode, compacted (the default plan)
+    cq = flip.compile(g, "sssp", flip.ExecutionPlan(tile=128))
     src = int(g.center_vertex())
-    prev, steps0 = eng.run(src)                # converge + warm the jit
+    prev = cq.query(src)                       # converge + warm the jit
 
     # <=1% of vertices affected: k edges touch at most 2k sources
     # (undirected mirroring makes both endpoints change out-edges)
     k = max(1, n // 512)
     batch = _monotone_edge_batch(g, rng, k)
-    g2 = g.apply_updates(batch)
-    eng2, delta = eng.apply_updates(g2, batch)
+    cq2, delta = cq.update(batch)
     assert delta.monotone, "weight halving must be monotone under min-plus"
     affected_pct = 100.0 * len(delta.affected_src) / n
     assert affected_pct <= 1.0, affected_pct
 
-    out_w, steps_w = eng2.run_updated(src, prev, delta)
-    out_s, steps_s = eng2.run(src)
-    np.testing.assert_array_equal(out_w, out_s)    # exactness gate
-    steps_w = max(int(steps_w), 1)
+    warm_res = cq2.query(src, warm=prev)
+    scratch_res = cq2.query(src)
+    np.testing.assert_array_equal(warm_res.attrs,
+                                  scratch_res.attrs)   # exactness gate
+    steps_w = max(int(warm_res.steps), 1)
+    steps_s = int(scratch_res.steps)
 
     repeats = 2 if fast else 3
-    _, us_w = timed(lambda: eng2.run_updated(src, prev, delta),
-                    repeats=repeats)
-    _, us_s = timed(lambda: eng2.run(src), repeats=repeats)
-    note = (f"road |V|={n} |E|={g2.m} {k} clustered edges reweighted, "
+    _, us_w = timed(lambda: cq2.query(src, warm=prev), repeats=repeats)
+    _, us_s = timed(lambda: cq2.query(src), repeats=repeats)
+    note = (f"road |V|={n} |E|={cq2.graph.m} {k} clustered edges "
+            f"reweighted, "
             f"{len(delta.affected_src)} vertices affected "
             f"({affected_pct:.2f}%)")
     emit(f"incremental_sssp_{size}_scratch", us_s,

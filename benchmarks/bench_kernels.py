@@ -4,8 +4,9 @@ correctness cost; on TPU these dispatch to the Pallas kernels).
 Emits the per-algebra frontier-relax rows future PRs track, a batched
 (B, ntiles, T) relax row, the dense-vs-compacted frontier-density sweep
 (`bench_frontier_density`), and the end-to-end multi-query batching win:
-B=32 BFS sources on an LRN road network through one `run_batch` fixpoint
-vs 32 sequential `run()` calls on the same backend. Results append to
+B=32 BFS sources on an LRN road network through one batched
+`CompiledQuery.query` fixpoint vs 32 sequential scalar queries on the
+same compiled session. Results append to
 BENCH_kernels.json via `common.write_json` -- written even when a bench
 section fails, so the perf trajectory never silently loses a run.
 """
@@ -19,8 +20,8 @@ import numpy as np
 
 from benchmarks import bench_frontier_density, bench_incremental
 from benchmarks.common import RESULTS, emit, timed, write_json
+from repro import api as flip
 from repro.algebra import ALGEBRAS
-from repro.core.engine import FlipEngine
 from repro.graphs import make_dataset, make_road_network
 from repro.kernels.frontier import build_blocks, frontier_relax
 from repro.models.attention import attend
@@ -95,20 +96,22 @@ def run():
 
 def bench_batching_win(fast: bool):
     """End-to-end multi-query amortization: B=32 BFS sources on the LRN
-    dataset, one shared `run_batch` fixpoint vs 32 sequential `run()`
-    calls (same engine, same jit cache, same backend)."""
+    dataset, one shared batched fixpoint vs 32 sequential scalar queries
+    (same compiled session, same jit cache, same backend)."""
     g = next(make_dataset("LRN", 1, seed0=0))
     rng = np.random.default_rng(0)
     srcs = rng.choice(g.n, size=32, replace=False)
-    eng = FlipEngine.build(g, "bfs", tile=128)
-    eng.run(int(srcs[0]))                      # warm the solo executable
-    eng.run_batch(srcs)                        # warm the batched one
-    _, us_seq = timed(lambda: [eng.run(int(s)) for s in srcs],
+    cq = flip.compile(g, "bfs", flip.ExecutionPlan(tile=128))
+    cq.query(int(srcs[0]))                     # warm the solo executable
+    cq.query(srcs)                             # warm the batched one
+    _, us_seq = timed(lambda: [cq.query(int(s)) for s in srcs],
                       repeats=1 if fast else 3)
-    _, us_bat = timed(lambda: eng.run_batch(srcs),
+    _, us_bat = timed(lambda: cq.query(srcs),
                       repeats=1 if fast else 3)
-    emit("frontier_bfs_lrn_seq32", us_seq, f"32 sequential run() |V|={g.n}")
-    emit("frontier_bfs_lrn_batch32", us_bat, "one run_batch fixpoint, B=32")
+    emit("frontier_bfs_lrn_seq32", us_seq,
+         f"32 sequential scalar queries |V|={g.n}")
+    emit("frontier_bfs_lrn_batch32", us_bat,
+         "one batched query fixpoint, B=32")
     emit("frontier_bfs_lrn_batch32_speedup", us_seq / us_bat,
          "sequential/batched wall ratio (x, higher is better)")
 

@@ -1,23 +1,24 @@
 """Graph analytics on the distributed JAX engine: every registered
-vertex algebra on every local device (shard_map over destination tiles).
+vertex algebra on every local device (shard_map over destination tiles),
+through the unified query API -- one distributed ExecutionPlan, one
+compiled session per algebra.
 
   PYTHONPATH=src python examples/graph_analytics.py
 """
+import flip
 from repro.algebra import ALGEBRAS
 from repro.core import compile_mapping
-from repro.core.engine import FlipEngine
-from repro.graphs import make_road_network, reference
+from repro.graphs import make_road_network
 
 g = make_road_network(512, seed=1)
 mapping = compile_mapping(g, effort=0, seed=0)
 print(f"|V|={g.n} |E|={g.m} slices={mapping.num_copies()}")
 srcs = [0, 17, 255, 64]          # batched: 4 queries per fixpoint
+plan = flip.ExecutionPlan(tile=64, distributed=True)
 for algo in sorted(ALGEBRAS):
-    eng = FlipEngine.build(g, algo, mapping=mapping, tile=64)
-    outs, steps = eng.run_distributed(srcs)
-    ok = all(ALGEBRAS[algo].results_match(outs[b],
-                                          reference.run(algo, g, s)[0])
-             for b, s in enumerate(srcs))
+    res = flip.compile(g, algo, plan, mapping=mapping).query(srcs)
     sem = ALGEBRAS[algo].semiring.name
+    ok = res.check()
     print(f"{algo:9s} ({sem:10s}): distributed batch of {len(srcs)} "
-          f"correct={ok} steps={steps.tolist()}")
+          f"correct={ok} steps={res.steps.tolist()}")
+    assert ok, f"{algo} diverged from its oracle"

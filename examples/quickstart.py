@@ -4,12 +4,15 @@ Builds a road network, compiles the vertex->PE mapping with the FLIP
 compiler, runs SSSP three ways (cycle-accurate simulator, TPU-native JAX
 frontier engine, classic op-centric mode), and verifies against Dijkstra.
 
+The engine runs go through the unified query API: compile a
+(graph, program, plan) session once, then query it.
+
   PYTHONPATH=src python examples/quickstart.py
 """
 import numpy as np
 
+import flip
 from repro.core import SSSP, compile_mapping, simulate, baselines
-from repro.core.engine import FlipEngine
 from repro.graphs import make_road_network, reference
 
 g = make_road_network(256, seed=0)                   # Table-4 "LRN" graph
@@ -28,17 +31,18 @@ print(f"speedup: {baselines.mcu_cycles('sssp', g, 5).time_us / t_us:.0f}x "
       f"vs MCU, {baselines.cgra_cycles('sssp', g, 5).time_us / t_us:.0f}x "
       f"vs op-centric CGRA")
 
-# 2. TPU-native frontier engine (data-centric mode)
-eng = FlipEngine.build(g, "sssp", mapping=mapping)
-attrs, steps = eng.run(5)
-print(f"jax engine (data-centric): fixpoint in {steps} steps")
+# 2. TPU-native frontier engine (data-centric mode, the default plan)
+res = flip.compile(g, "sssp", mapping=mapping).query(5)
+print(f"jax engine (data-centric): fixpoint in {res.steps} steps")
 
-# 3. classic op-centric mode (mode switch, Sec. 3.4)
-attrs_op, steps_op = FlipEngine.build(g, "sssp", mapping=mapping,
-                                      mode="op").run(5)
+# 3. classic op-centric mode (one plan knob, Sec. 3.4)
+res_op = flip.compile(g, "sssp", flip.ExecutionPlan(mode="op"),
+                      mapping=mapping).query(5)
 
 ref, _ = reference.sssp(g, 5)
-for name, a in [("sim", r.attrs), ("data", attrs), ("op", attrs_op)]:
+for name, a in [("sim", r.attrs), ("data", res.attrs),
+                ("op", res_op.attrs)]:
     ok = np.allclose(np.where(np.isinf(a), -1, a),
                      np.where(np.isinf(ref), -1, ref))
     print(f"correct ({name} vs Dijkstra): {ok}")
+    assert ok, f"{name} diverged from Dijkstra"

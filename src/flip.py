@@ -1,0 +1,19 @@
+"""flip: the FLIP accelerator's unified front door.
+
+    import flip
+
+    cq = flip.compile(graph, "sssp", flip.ExecutionPlan(tile=128))
+    result = cq.query(5)
+
+A thin alias of `repro.api` so user code reads like the paper: compile
+a (graph, program, plan) triple once, then query the session. See
+docs/API.md for the full reference and the legacy->new migration table.
+"""
+from repro.api import (CompiledQuery, ExecutionPlan, Program, QueryResult,
+                       WarmStart, compile, plan_from_cli,
+                       resolve_cli_engine)
+
+__all__ = [
+    "ExecutionPlan", "Program", "CompiledQuery", "QueryResult",
+    "WarmStart", "compile", "plan_from_cli", "resolve_cli_engine",
+]

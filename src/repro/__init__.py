@@ -9,6 +9,20 @@ Layers:
   repro.configs  -- one config per assigned architecture
   repro.distributed / repro.optim / repro.checkpoint / repro.data
   repro.launch   -- mesh, dryrun, train, serve, graph_run
+  repro.api      -- the unified query surface: compile(graph, program,
+                    plan) -> CompiledQuery sessions (alias: `import flip`)
 """
 
 __version__ = "1.0.0"
+
+_API_EXPORTS = ("compile", "Program", "ExecutionPlan", "CompiledQuery",
+                "QueryResult", "WarmStart")
+
+
+def __getattr__(name):
+    # `repro.compile(...)` works without importing jax at package import
+    # time (the api pulls in the whole engine stack lazily).
+    if name in _API_EXPORTS:
+        from repro import api
+        return getattr(api, name)
+    raise AttributeError(f"module 'repro' has no attribute {name!r}")

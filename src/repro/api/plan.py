@@ -1,0 +1,183 @@
+"""ExecutionPlan: every execution knob of a FLIP query in one typed,
+validated place.
+
+The engine layers grew one string/bool knob at a time -- fabric `mode`,
+kernel `relax_mode`, frontier `compact`ion, tile size, serving batch
+size, device mesh, warm-start policy -- spread over `FlipEngine.build`
+arguments, per-call parameters, and CLI flags with their own spellings.
+An `ExecutionPlan` captures all of them as one frozen dataclass with a
+single `resolve()` step that (a) validates every combination up front
+(bad combos fail at compile time with one clear error, not deep inside a
+jit trace) and (b) collapses every ``"auto"`` to its concrete choice, so
+a resolved plan is a complete, reproducible record of how a query ran.
+
+`flip.compile(graph, program, plan)` takes a plan (default:
+`ExecutionPlan.auto()`) and attaches the resolved form to every
+`QueryResult`.
+"""
+from __future__ import annotations
+
+import dataclasses
+import warnings
+
+import jax
+
+from repro.algebra import VertexAlgebra
+from repro.kernels.frontier.ops import resolve_relax_mode
+
+MODES = ("data", "op")
+RELAX_MODES = ("auto", "pallas", "interpret", "jnp")
+WARM_POLICIES = ("auto", "always", "never")
+
+
+@dataclasses.dataclass(frozen=True)
+class ExecutionPlan:
+    """How a compiled query executes. All fields have working defaults;
+    ``"auto"`` values are collapsed by `resolve()`.
+
+    mode        -- 'data' (FLIP packet-triggered frontier execution) or
+                   'op' (classic-CGRA full sweep per step).
+    relax_mode  -- kernel dispatch: 'auto' (Pallas on TPU, jnp
+                   elsewhere), 'pallas', 'interpret', or 'jnp'.
+    compact     -- frontier-compacted block streaming: True / False /
+                   'auto' (= on exactly for data mode). Always exact.
+    tile        -- block tile size (vertices per tile).
+    batch       -- serving bucket size: 0 runs any source sequence as
+                   one fixpoint; B > 0 dispatches fixed-size, padded
+                   buckets of B so every dispatch reuses one compiled
+                   (B, ntiles, T) executable (the GraphServer policy).
+    distributed -- run the shard_map fixpoint (destination tiles
+                   sharded over `mesh_axis`, queries replicated).
+    mesh        -- jax Mesh for distributed runs (None = all local
+                   devices); supplying a mesh implies distributed=True.
+    mesh_axis   -- mesh axis name the tiles shard over.
+    warm        -- incremental-recompute policy for `query(..., warm=)`:
+                   'auto' resumes from the prior result whenever sound
+                   (monotone algebra + monotone update delta) and falls
+                   back to scratch otherwise; 'always' errors instead of
+                   falling back; 'never' forbids warm starts.
+    max_steps   -- fixpoint safety valve.
+    """
+
+    mode: str = "data"
+    relax_mode: str = "auto"
+    compact: bool | str = "auto"
+    tile: int = 128
+    batch: int = 0
+    distributed: bool = False
+    mesh: object = None          # jax.sharding.Mesh | None
+    mesh_axis: str = "data"
+    warm: str = "auto"
+    max_steps: int = 100_000
+
+    # -------------------------------------------------------------- #
+    @classmethod
+    def auto(cls, **overrides) -> "ExecutionPlan":
+        """The default plan (every knob on 'auto'), with overrides."""
+        return cls(**overrides)
+
+    def validate(self, algebra: VertexAlgebra | None = None) -> None:
+        """Reject inconsistent knob combinations with one clear error.
+        With `algebra`, additionally checks algebra-dependent combos
+        (warm='always' needs a monotone algebra)."""
+        if self.mode not in MODES:
+            raise ValueError(
+                f"plan.mode must be one of {MODES}, got {self.mode!r}")
+        if self.relax_mode not in RELAX_MODES:
+            raise ValueError(
+                f"plan.relax_mode must be one of {RELAX_MODES}, got "
+                f"{self.relax_mode!r}")
+        if self.compact not in (True, False, "auto"):
+            raise ValueError(
+                "plan.compact must be True, False, or 'auto', got "
+                f"{self.compact!r}")
+        if self.compact is True and self.mode == "op":
+            raise ValueError(
+                "plan.compact=True is inconsistent with mode='op': an "
+                "op-mode sweep relaxes every block by definition, so "
+                "there is nothing to compact -- use mode='data' or "
+                "compact='auto'")
+        if not isinstance(self.tile, int) or self.tile < 1:
+            raise ValueError(f"plan.tile must be a positive int, got "
+                             f"{self.tile!r}")
+        if not isinstance(self.batch, int) or self.batch < 0:
+            raise ValueError(
+                f"plan.batch must be an int >= 0 (0 = one fixpoint over "
+                f"the whole source sequence), got {self.batch!r}")
+        if self.warm not in WARM_POLICIES:
+            raise ValueError(
+                f"plan.warm must be one of {WARM_POLICIES}, got "
+                f"{self.warm!r}")
+        if self.max_steps < 1:
+            raise ValueError(
+                f"plan.max_steps must be >= 1, got {self.max_steps}")
+        if algebra is not None and self.warm == "always" \
+                and algebra.kind != "monotone":
+            raise ValueError(
+                f"plan.warm='always' needs a monotone algebra; "
+                f"{algebra.name} is {algebra.kind!r} (its fixpoint "
+                "cannot resume from a prior result) -- use warm='auto' "
+                "or 'never'")
+
+    def resolve(self, algebra: VertexAlgebra | None = None) \
+            -> "ExecutionPlan":
+        """Validate and collapse every 'auto' to its concrete choice:
+        relax_mode picks the backend kernel, compact follows the fabric
+        mode, and a supplied mesh implies distributed execution. The
+        returned plan is a complete record of how queries will run (and
+        resolving it again is the identity)."""
+        self.validate(algebra)
+        relax = resolve_relax_mode(self.relax_mode)
+        if relax == "pallas" and jax.default_backend() != "tpu":
+            raise ValueError(
+                "plan.relax_mode='pallas' needs a TPU backend, but "
+                f"jax.default_backend() is {jax.default_backend()!r}; "
+                "use 'interpret' (exact, slow) or 'jnp'")
+        compact = (self.mode == "data" if self.compact == "auto"
+                   else bool(self.compact))
+        plan = dataclasses.replace(
+            self, relax_mode=relax, compact=compact,
+            distributed=bool(self.distributed or self.mesh is not None))
+        plan.validate(algebra)
+        return plan
+
+    def key(self) -> tuple:
+        """Hashable cache key (session caches key on fingerprint+plan).
+        The mesh participates by identity: two plans over different mesh
+        objects compile different executables."""
+        return (self.mode, self.relax_mode, self.compact, self.tile,
+                self.batch, self.distributed,
+                None if self.mesh is None else id(self.mesh),
+                self.mesh_axis, self.warm, self.max_steps)
+
+
+# ------------------------------------------------------------------ #
+# CLI spelling resolution (graph_run and friends)
+# ------------------------------------------------------------------ #
+def resolve_cli_engine(engine: str, mode: str) -> tuple[str, str]:
+    """Collapse deprecated CLI spellings so every option has exactly one
+    canonical form. ``--engine op`` is the pre-split spelling of
+    ``--engine jax --mode op``: still accepted, warns once (the default
+    warning filter deduplicates repeats)."""
+    if engine == "op":
+        warnings.warn(
+            "--engine op is deprecated; use --engine jax --mode op",
+            DeprecationWarning, stacklevel=2)
+        return "jax", "op"
+    return engine, mode
+
+
+def plan_from_cli(engine: str, mode: str, compact: bool | str = "auto",
+                  tile: int = 128, batch: int = 0) -> ExecutionPlan:
+    """One ExecutionPlan from the graph_run-style CLI surface: folds the
+    deprecated ``--engine op`` alias, maps ``--engine dist`` to a
+    distributed plan, and threads the remaining knobs through unchanged
+    (the 'sim' engine never reaches a plan -- the cycle simulator is not
+    a FlipEngine backend)."""
+    engine, mode = resolve_cli_engine(engine, mode)
+    if engine not in ("jax", "dist"):
+        raise ValueError(
+            f"engine {engine!r} has no ExecutionPlan (expected 'jax' or "
+            "'dist'; 'sim' runs the cycle simulator, not the engine)")
+    return ExecutionPlan(mode=mode, compact=compact, tile=tile,
+                         batch=batch, distributed=(engine == "dist"))

@@ -1,0 +1,267 @@
+"""The compile-then-query session: `flip.compile(graph, program, plan)`.
+
+One front door replaces the fragmented `FlipEngine.run*` surface:
+
+    import flip
+
+    cq = flip.compile(graph, "sssp")              # CompiledQuery session
+    r = cq.query(5)                               # scalar -> (n,) attrs
+    rb = cq.query([0, 5, 9])                      # batch  -> (B, n)
+    assert r.check()                              # vs the numpy oracle
+
+    cq2, delta = cq.update(edge_batch)            # streaming mutation
+    r2 = cq2.query(5, warm=r)                     # incremental recompute
+
+`query` uniformly handles scalar, batched, bucketed (plan.batch > 0),
+distributed (plan.distributed), and incremental (warm=) execution --
+the plan decides *how*, never *what*: every path returns bit-for-bit
+the same attrs. Results come back as a structured `QueryResult` with
+the resolved plan, per-query steps, and wall time attached.
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+
+import numpy as np
+
+from repro.api.plan import ExecutionPlan
+from repro.api.program import Program
+from repro.core.engine import FlipEngine, WarmStart
+from repro.graphs.csr import Graph
+from repro.kernels.frontier.ops import UpdateDelta
+
+
+@dataclasses.dataclass
+class QueryResult:
+    """One query's outcome: attrs in original vertex order ((n,) for a
+    scalar source, (B, n) for a batch), per-query relaxation step
+    counts (int / (B,) to match), the sources as queried, the resolved
+    plan that produced it, and wall seconds. Usable directly as the
+    `warm=` argument of a post-update `query` call."""
+
+    attrs: np.ndarray
+    steps: int | np.ndarray
+    srcs: int | np.ndarray
+    plan: ExecutionPlan
+    program: Program
+    graph: Graph
+    wall_s: float = 0.0
+    dispatches: int = 1
+
+    @property
+    def batched(self) -> bool:
+        return bool(np.ndim(self.srcs))
+
+    def check(self) -> bool:
+        """Verify every row against the program's numpy oracle at the
+        algebra's tolerance."""
+        if not self.batched:
+            return self.program.check(self.graph, int(self.srcs),
+                                      self.attrs)
+        return all(self.program.check(self.graph, int(s), self.attrs[b])
+                   for b, s in enumerate(np.asarray(self.srcs)))
+
+
+@dataclasses.dataclass
+class CompiledQuery:
+    """A compiled (graph, program, plan) session. Create via
+    `flip.compile`; `plan` is already resolved (no 'auto' left)."""
+
+    graph: Graph
+    program: Program
+    plan: ExecutionPlan
+    engine: FlipEngine
+    delta: UpdateDelta | None = None   # set by update(): the last batch
+    prev_fp: str | None = None         # fingerprint of the pre-update
+                                       # graph the delta resumes from
+
+    # -------------------------------------------------------------- #
+    def query(self, srcs, *, warm=None) -> QueryResult:
+        """Run the program from `srcs` under the session's plan.
+
+        srcs -- one source vertex (scalar result shapes) or a sequence
+                of B independent sources (batched shapes). With
+                plan.batch = B > 0, longer sequences dispatch in padded
+                fixed-size buckets of B (every dispatch reuses one
+                compiled executable -- the serving policy); with
+                plan.batch = 0 the whole sequence is one fixpoint.
+        warm -- resume from a prior converged result: a `QueryResult`
+                for the same sources on the pre-update session (the
+                session's last `update` delta decides soundness under
+                plan.warm policy), or an explicit `WarmStart`.
+
+        Every combination returns bit-for-bit the attrs a plain scratch
+        scalar run would produce.
+        """
+        t0 = time.perf_counter()
+        batched = bool(np.ndim(srcs))
+        if batched and len(np.atleast_1d(srcs)) == 0:
+            # degenerate empty batch: well-formed empty shapes (the
+            # tiled engine state cannot represent B=0)
+            return QueryResult(
+                attrs=np.zeros((0, self.graph.n), dtype=np.float32),
+                steps=np.zeros(0, dtype=np.int32),
+                srcs=np.zeros(0, dtype=np.int64), plan=self.plan,
+                program=self.program, graph=self.graph,
+                wall_s=time.perf_counter() - t0, dispatches=0)
+        ws = self._resolve_warm(warm, srcs)
+        if not batched or self.plan.batch == 0:
+            out, steps = self.engine.execute(
+                srcs, warm=ws, distributed=self.plan.distributed,
+                mesh=self.plan.mesh, axis=self.plan.mesh_axis)
+            dispatches = 1
+        else:
+            # every batched query pads to fixed-size buckets of
+            # plan.batch -- a short sequence too, so each dispatch
+            # reuses one (B, ntiles, T) executable regardless of the
+            # caller's tail size
+            out, steps, dispatches = self._query_bucketed(
+                np.atleast_1d(np.asarray(srcs, dtype=np.int64)), ws)
+        return QueryResult(attrs=out, steps=steps,
+                           srcs=(np.asarray(srcs) if batched
+                                 else int(srcs)),
+                           plan=self.plan, program=self.program,
+                           graph=self.graph,
+                           wall_s=time.perf_counter() - t0,
+                           dispatches=dispatches)
+
+    def _query_bucketed(self, srcs, ws):
+        """plan.batch-sized dispatch: pad the tail bucket by repeating
+        its last source so every dispatch shares one (B, ntiles, T)
+        executable, then drop the padded rows."""
+        nb = self.plan.batch
+        outs, steps, dispatches = [], [], 0
+        for i in range(0, len(srcs), nb):
+            chunk = srcs[i:i + nb]
+            padded = np.concatenate(
+                [chunk, np.repeat(chunk[-1:], nb - len(chunk))])
+            w = self._slice_warm(ws, i, len(chunk), nb)
+            o, s = self.engine.execute(
+                padded, warm=w, distributed=self.plan.distributed,
+                mesh=self.plan.mesh, axis=self.plan.mesh_axis)
+            outs.append(o[:len(chunk)])
+            steps.append(s[:len(chunk)])
+            dispatches += 1
+        return (np.concatenate(outs), np.concatenate(steps), dispatches)
+
+    @staticmethod
+    def _slice_warm(ws, i, k, nb):
+        """Per-bucket view of a warm start: (n,) warm attrs broadcast to
+        every bucket; (B, n) warm attrs follow their queries (padded by
+        repeating the chunk's last row, mirroring the source padding)."""
+        if ws is None or np.ndim(ws.attrs) == 1:
+            return ws
+        rows = ws.attrs[i:i + k]
+        rows = np.concatenate(
+            [rows, np.repeat(rows[-1:], nb - k, axis=0)])
+        return WarmStart(attrs=rows, seeds=ws.seeds)
+
+    def _resolve_warm(self, warm, srcs) -> WarmStart | None:
+        """Apply the plan's warm policy to the caller's `warm`."""
+        if warm is None:
+            return None
+        if self.plan.warm == "never":
+            raise ValueError(
+                "this session's plan has warm='never'; query(warm=...) "
+                "is forbidden -- recompute from scratch or compile with "
+                "warm='auto'")
+        if isinstance(warm, WarmStart):
+            return warm
+        if isinstance(warm, QueryResult):
+            qs = np.atleast_1d(np.asarray(srcs, dtype=np.int64))
+            wsrc = np.atleast_1d(np.asarray(warm.srcs, dtype=np.int64))
+            # a converged result only resumes *its own* sources: a
+            # scalar-source result may fan out over a batch of that
+            # same source, anything else would converge to the wrong
+            # query's fixpoint
+            if not ((wsrc.shape == qs.shape and np.array_equal(wsrc, qs))
+                    or (wsrc.size == 1 and bool(np.all(qs == wsrc[0])))):
+                raise ValueError(
+                    f"warm result was computed for sources "
+                    f"{wsrc.tolist()} but this query asks for "
+                    f"{qs.tolist()}; a warm start only resumes the "
+                    "same sources")
+            if self.delta is None:
+                raise ValueError(
+                    "query(warm=QueryResult) resumes across an update: "
+                    "this session has no update delta (create it with "
+                    "session.update(...)); pass an explicit WarmStart "
+                    "to resume from arbitrary state")
+            attrs = np.asarray(warm.attrs)
+            if wsrc.size == 1 and attrs.ndim == 2 \
+                    and qs.shape != wsrc.shape:
+                # single-source fan-out: a (1, n) batched result
+                # broadcasts over the batch exactly like a scalar one
+                attrs = attrs[0]
+            if warm.graph.fingerprint() != self.prev_fp:
+                # the delta's seeds only cover the *last* batch: a warm
+                # result from an older (or unrelated) graph version
+                # would silently miss earlier updates' improvements
+                raise ValueError(
+                    "warm result was not computed on this session's "
+                    "pre-update graph version; re-query each version "
+                    "(warm results are valid across exactly one "
+                    "update), or pass an explicit WarmStart")
+            ws = self.engine.resolve_warm(attrs, self.delta)
+            if ws is None and self.plan.warm == "always":
+                raise ValueError(
+                    f"plan.warm='always' but the last update batch is "
+                    f"not monotone under {self.program.name}'s ⊕ (or "
+                    "the algebra is not monotone): incremental "
+                    "recompute would be unsound")
+            return ws
+        raise TypeError(
+            f"warm must be a QueryResult or WarmStart, got "
+            f"{type(warm).__name__}")
+
+    # -------------------------------------------------------------- #
+    def update(self, updates, new_graph: Graph | None = None) \
+            -> tuple["CompiledQuery", UpdateDelta]:
+        """Streaming graph mutation: apply one edge-update batch and
+        return ``(new_session, delta)``. The new session re-blocks only
+        the touched tiles (value-only rebuilds keep every compiled
+        executable hot) and remembers `delta`, so a subsequent
+        ``query(src, warm=prev_result)`` resumes incrementally exactly
+        when sound. This session is left untouched -- sessions are
+        immutable snapshots of one graph version."""
+        updates = list(updates)      # consumed twice (graph + engine)
+        g2 = (self.graph.apply_updates(updates) if new_graph is None
+              else new_graph)
+        eng2, delta = self.engine.apply_updates(g2, updates)
+        return dataclasses.replace(
+            self, graph=g2, engine=eng2, delta=delta,
+            prev_fp=self.graph.fingerprint()), delta
+
+
+# ------------------------------------------------------------------ #
+# the front door
+# ------------------------------------------------------------------ #
+def compile(graph: Graph, program, plan: ExecutionPlan | None = None, *,
+            mapping=None) -> CompiledQuery:
+    """Compile a (graph, program, plan) triple into a query session.
+
+    graph   -- a `repro.graphs.csr.Graph`.
+    program -- a registered algorithm name ('bfs', 'sssp', ...), a
+               `VertexAlgebra`, or a `Program`.
+    plan    -- an `ExecutionPlan` (default `ExecutionPlan.auto()`);
+               validated and resolved here, so every knob conflict
+               fails at compile time.
+    mapping -- optional FLIP `Mapping`: the placement-induced vertex
+               ordering becomes block sparsity, exactly as in
+               `FlipEngine.build`.
+
+    Returns a `CompiledQuery` whose `.query(srcs, warm=...)` covers
+    scalar, batched, bucketed, distributed, and incremental execution
+    under the one resolved plan.
+    """
+    prog = Program.of(program)
+    rplan = (plan if plan is not None else ExecutionPlan()).resolve(
+        prog.algebra)
+    engine = FlipEngine.build(graph, prog.algebra, mapping=mapping,
+                              tile=rplan.tile, mode=rplan.mode,
+                              relax_mode=rplan.relax_mode,
+                              compact=rplan.compact)
+    engine = dataclasses.replace(engine, max_steps=rplan.max_steps)
+    return CompiledQuery(graph=graph, program=prog, plan=rplan,
+                         engine=engine)

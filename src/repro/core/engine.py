@@ -32,10 +32,15 @@ so a new algebra runs here unchanged.
 
 Execution is batched over independent queries: the state is
 (B, ntiles, T) -- B sources relaxing against one shared block structure
-inside one `jax.lax.while_loop` fixpoint (`run_batch`; `run` is the B=1
-view). Queries whose frontier has emptied are frozen by a per-query
-convergence mask, so a long-tail query never perturbs finished ones and
-batched results are bit-for-bit the per-source results.
+inside one `jax.lax.while_loop` fixpoint. `FlipEngine.execute` is the
+single entry point (scalar source = the B=1 view; `distributed=True`
+switches to the shard_map fixpoint; `warm=` resumes a prior result) --
+the legacy `run`/`run_batch`/`run_distributed`/`run_updated` methods are
+deprecated shims over it, and `repro.api` ( `flip.compile(graph,
+program, plan).query(srcs)` ) is the intended front door. Queries whose
+frontier has emptied are frozen by a per-query convergence mask, so a
+long-tail query never perturbs finished ones and batched results are
+bit-for-bit the per-source results.
 
 Both paths can execute distributed via `shard_map`: destination tiles
 are partitioned over a mesh axis (devices = PE clusters), queries stay
@@ -47,6 +52,7 @@ from __future__ import annotations
 
 import dataclasses
 import functools
+import warnings
 
 import jax
 import jax.numpy as jnp
@@ -233,19 +239,48 @@ class FlipEngine:
         return attrs, aux, jnp.asarray(steps)
 
     # -------------------------------------------------------------- #
-    def run(self, src: int = 0, warm: WarmStart | None = None):
-        """Single-query fixpoint; returns the algebra's result vector in
-        original vertex order plus the number of relaxation steps taken.
-        `warm` resumes from a prior converged result (see `WarmStart`)."""
-        out, steps = self.run_batch([src], warm=warm)
-        return out[0], int(steps[0])
+    # the one plan-driven executor
+    # -------------------------------------------------------------- #
+    def execute(self, srcs, *, warm: WarmStart | None = None,
+                distributed: bool = False, mesh: Mesh | None = None,
+                axis: str = "data"):
+        """The single execution entry point every layer drives.
 
-    def run_batch(self, srcs, warm: WarmStart | None = None):
-        """Batched fixpoint over B independent sources sharing one weight-
-        block stream; returns ((B, n) results in original vertex order,
-        (B,) per-query relaxation step counts). Each row is bit-for-bit
-        the corresponding `run(src)` result. `warm` resumes every query
-        from a prior converged result (see `WarmStart`)."""
+        One call uniformly covers what used to be four methods: a scalar
+        `srcs` is a solo query (`(n,)` result, int steps), a sequence is
+        a batch (`(B, n)` / `(B,)`), `warm` resumes from a prior
+        converged result (incremental recompute, see `WarmStart` /
+        `resolve_warm`), and `distributed=True` runs the shard_map
+        fixpoint over `mesh` (default: all local devices) instead of the
+        local one. Results are bit-for-bit identical across all of these
+        axes -- batching, distribution, and warm starts never change the
+        fixpoint, only how it is reached.
+
+        `repro.api.CompiledQuery` is the intended driver: it resolves an
+        `ExecutionPlan` into these arguments. The legacy `run*` methods
+        are deprecated shims over this method.
+        """
+        batched = bool(np.ndim(srcs))
+        srcs = np.atleast_1d(np.asarray(srcs, dtype=np.int64))
+        if distributed:
+            out, steps = self._execute_distributed(srcs, warm=warm,
+                                                   mesh=mesh, axis=axis)
+        else:
+            out, steps = self._execute_local(srcs, warm=warm)
+        return (out, steps) if batched else (out[0], int(steps[0]))
+
+    def resolve_warm(self, prev, delta: UpdateDelta) -> WarmStart | None:
+        """Warm-start dispatch after `apply_updates`: a `delta.monotone`
+        batch on a monotone algebra may resume from `prev` with only
+        `delta.affected_src` seeded active; anything else must recompute
+        from scratch (returns None)."""
+        if delta.monotone and self.algebra.kind == "monotone":
+            return WarmStart(attrs=np.asarray(prev, dtype=np.float32),
+                             seeds=delta.affected_src)
+        return None
+
+    def _execute_local(self, srcs, warm: WarmStart | None = None):
+        """Local fixpoint over a (B,) source array; always batched."""
         attrs0, aux0, frontier0 = self.initial_state(srcs, warm=warm)
         attrs, aux, steps = self._fixpoint(attrs0, aux0, frontier0)
         return (self.bg.to_orig(self.algebra.finalize(attrs, aux)),
@@ -265,32 +300,14 @@ class FlipEngine:
         bg2, delta = self.bg.apply_updates(new_graph, updates)
         return dataclasses.replace(self, bg=bg2), delta
 
-    def run_updated(self, src, prev, delta: UpdateDelta):
-        """Recompute after `apply_updates`, incrementally when sound:
-        a `delta.monotone` batch resumes from `prev` (the converged
-        result of the same `src` query on the pre-update engine) with
-        only `delta.affected_src` seeded active; any other batch falls
-        back to a full from-scratch run. Either way the result is
-        bit-for-bit the from-scratch fixpoint on the updated graph.
-        `src`/`prev` follow `run`/`run_batch` shapes: a scalar source
-        with an `(n,)` result, or a sequence with a `(B, n)` result."""
-        batched = bool(np.ndim(src))
-        srcs = np.atleast_1d(np.asarray(src, dtype=np.int64))
-        warm = None
-        if delta.monotone and self.algebra.kind == "monotone":
-            warm = WarmStart(attrs=np.asarray(prev, dtype=np.float32),
-                             seeds=delta.affected_src)
-        out, steps = self.run_batch(srcs, warm=warm)
-        return (out, steps) if batched else (out[0], int(steps[0]))
-
     # -------------------------------------------------------------- #
-    def run_distributed(self, src=0, mesh: Mesh | None = None,
-                        axis: str = "data", warm: WarmStart | None = None):
-        """shard_map fixpoint: destination tiles sharded over `axis`,
-        queries replicated; returns `(result, steps)` like `run` (batched
-        `(B, n)` / `(B,)` forms when `src` is a sequence). `warm` resumes
-        from a prior converged result (see `WarmStart`), so incremental
-        recompute after a monotone update batch works distributed too.
+    def _execute_distributed(self, srcs, warm: WarmStart | None = None,
+                             mesh: Mesh | None = None, axis: str = "data"):
+        """shard_map fixpoint over a (B,) source array; always batched:
+        destination tiles sharded over `axis`, queries replicated.
+        `warm` resumes from a prior converged result (see `WarmStart`),
+        so incremental recompute after a monotone update batch works
+        distributed too.
 
         Each device owns a contiguous slab of destination tiles and the
         blocks that write them; per step it computes its slab's new attrs
@@ -317,8 +334,6 @@ class FlipEngine:
         bg, alg = self.bg, self.algebra
         sr = alg.semiring
         zero = np.float32(sr.zero)
-        batched = bool(np.ndim(src))
-        srcs = np.atleast_1d(np.asarray(src, dtype=np.int64))
 
         # pad tiles to a multiple of ndev, then slice each device's block
         # slab straight out of the bdst-sorted list via the precomputed
@@ -428,5 +443,47 @@ class FlipEngine:
             jnp.asarray(valid_sh), attrs0, aux0, frontier0)
         out = self.algebra.finalize(attrs_f, aux_f)
         out = self.bg.to_orig(out[:, :bg.ntiles])
-        steps = np.asarray(steps)
-        return (out, steps) if batched else (out[0], int(steps[0]))
+        return out, np.asarray(steps)
+
+    # -------------------------------------------------------------- #
+    # deprecated pre-api entry points: thin shims over `execute`
+    # -------------------------------------------------------------- #
+    @staticmethod
+    def _warn_legacy(name: str) -> None:
+        warnings.warn(
+            f"FlipEngine.{name} is deprecated; compile a session with "
+            "flip.compile(graph, program, plan) (repro.api) and call "
+            ".query(...), or drive FlipEngine.execute directly",
+            DeprecationWarning, stacklevel=3)
+
+    def run(self, src: int = 0, warm: WarmStart | None = None):
+        """Deprecated: `execute(src)`. Single-query fixpoint; returns
+        the algebra's result vector in original vertex order plus the
+        number of relaxation steps taken."""
+        self._warn_legacy("run")
+        return self.execute(int(src), warm=warm)
+
+    def run_batch(self, srcs, warm: WarmStart | None = None):
+        """Deprecated: `execute(srcs)` with a sequence. Batched fixpoint
+        over B independent sources sharing one weight-block stream;
+        returns ((B, n) results, (B,) per-query step counts), each row
+        bit-for-bit the corresponding solo result."""
+        self._warn_legacy("run_batch")
+        return self.execute(np.atleast_1d(np.asarray(srcs)), warm=warm)
+
+    def run_distributed(self, src=0, mesh: Mesh | None = None,
+                        axis: str = "data", warm: WarmStart | None = None):
+        """Deprecated: `execute(src, distributed=True)`. shard_map
+        fixpoint with destination tiles sharded over `axis`; shapes
+        follow `src` like `execute`."""
+        self._warn_legacy("run_distributed")
+        return self.execute(src, warm=warm, distributed=True,
+                            mesh=mesh, axis=axis)
+
+    def run_updated(self, src, prev, delta: UpdateDelta):
+        """Deprecated: `execute(src, warm=resolve_warm(prev, delta))`.
+        Recompute after `apply_updates`, incrementally when sound (see
+        `resolve_warm`); the result is bit-for-bit the from-scratch
+        fixpoint on the updated graph either way."""
+        self._warn_legacy("run_updated")
+        return self.execute(src, warm=self.resolve_warm(prev, delta))

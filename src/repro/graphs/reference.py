@@ -162,17 +162,42 @@ def reach(g: Graph, src: int):
     return seen.astype(np.float32), {"edges_relaxed": edges_relaxed}
 
 
+# ---------------------------------------------------------------------- #
+# oracle registry: one entry per registered algorithm, so `run` dispatch
+# and `repro.api.Program` registration share a single table. Every oracle
+# is normalized to the `(graph, src) -> (result, stats)` signature
+# (src-free algorithms ignore src; stats may be empty).
+# ---------------------------------------------------------------------- #
+ORACLES = {
+    "bfs": bfs,
+    "sssp": sssp,
+    "wcc": lambda g, src=0: wcc(g),
+    "pagerank": lambda g, src=0: pagerank(g),
+    "widest": widest,
+    "reach": reach,
+}
+
+
+def register_oracle(name: str, fn) -> None:
+    """Register `fn(graph, src)` as the ground truth for algorithm
+    `name`. `fn` may return just the result vector or `(result, stats)`;
+    `run` normalizes either form. `repro.api.Program` calls this
+    atomically with the `VertexAlgebra` registration."""
+    ORACLES[name] = fn
+
+
+def get_oracle(name: str):
+    """The registered oracle callable, or None if the algorithm has no
+    numpy ground truth (engine-only algebras)."""
+    return ORACLES.get(name)
+
+
 def run(algo: str, g: Graph, src: int = 0):
-    if algo == "bfs":
-        return bfs(g, src)
-    if algo == "sssp":
-        return sssp(g, src)
-    if algo == "wcc":
-        return wcc(g)
-    if algo == "pagerank":
-        return pagerank(g)
-    if algo == "widest":
-        return widest(g, src)
-    if algo == "reach":
-        return reach(g, src)
-    raise ValueError(f"unknown algorithm {algo!r}")
+    fn = ORACLES.get(algo)
+    if fn is None:
+        raise ValueError(f"unknown algorithm {algo!r}")
+    out = fn(g, src)
+    if isinstance(out, tuple) and len(out) == 2 and isinstance(out[1],
+                                                               dict):
+        return out
+    return np.asarray(out), {}

@@ -10,13 +10,15 @@ layers, in either fabric mode:
   --mode data|op   FLIP packet-triggered vs classic-CGRA full-sweep
                    (jax/dist engines; the simulator is data-centric only)
 
-`--engine op` is the deprecated pre-split spelling of
-`--engine jax --mode op` and keeps working.
+The jax/dist engines run through the unified query API: the CLI flags
+fold into one `flip.ExecutionPlan` (`plan_from_cli`, which also accepts
+the deprecated ``--engine op`` spelling of ``--engine jax --mode op``
+with a one-time warning), and every query goes through
+`flip.compile(graph, algo, plan).query(...)`.
 
 Multi-query serving: `--srcs 0,5,9` runs a batch of sources through one
-shared fixpoint (`run_batch` / batched `run_distributed`); `--batch B`
-additionally routes them through the `serve_graph.GraphServer` dispatch
-path in fixed-size buckets of B.
+shared fixpoint; `--batch B` additionally routes them through the
+`serve_graph.GraphServer` dispatch path in fixed-size buckets of B.
 
 Examples:
   PYTHONPATH=src python -m repro.launch.graph_run --algo sssp \
@@ -32,8 +34,8 @@ import time
 
 import numpy as np
 
+from repro import api as flip
 from repro.core import (compile_mapping, simulate, PROGRAMS, baselines)
-from repro.core.engine import FlipEngine, WarmStart
 from repro.graphs import make_dataset, reference
 
 
@@ -54,7 +56,7 @@ def main():
     ap.add_argument("--batch", type=int, default=0,
                     help="with --srcs: dispatch through the serving "
                          "front-end in fixed-size buckets of this many "
-                         "queries (0 = one run_batch over all sources)")
+                         "queries (0 = one fixpoint over all sources)")
     ap.add_argument("--compact", default="auto",
                     choices=["auto", "on", "off"],
                     help="frontier-compacted block streaming for the "
@@ -71,10 +73,10 @@ def main():
     args = ap.parse_args()
     args.compact = {"auto": "auto", "on": True, "off": False}[args.compact]
 
-    if args.engine == "op":            # deprecated pre-split spelling
-        print("[graph] --engine op is deprecated; use "
-              "--engine jax --mode op")
-        args.engine, args.mode = "jax", "op"
+    # one plan resolution folds every deprecated CLI spelling
+    # (--engine op -> --engine jax --mode op, warns once)
+    args.engine, args.mode = flip.resolve_cli_engine(args.engine,
+                                                     args.mode)
     srcs = ([int(s) for s in args.srcs.split(",")]
             if args.srcs else None)
     if srcs is not None and args.engine == "sim":
@@ -121,22 +123,20 @@ def main():
             t_f = r.cycles / mapping.arch.freq_mhz
             print(f"[graph] speedup vs MCU {mcu.time_us / t_f:.1f}x, "
                   f"vs op-centric CGRA {cgra.time_us / t_f:.1f}x")
-    elif args.engine == "jax":
-        eng = FlipEngine.build(g, args.algo, mapping=mapping,
-                               mode=args.mode, compact=args.compact)
-        t0 = time.time()
-        attrs, steps = eng.run(args.src)
-        print(f"[graph] jax/{args.mode}: fixpoint in {steps} relaxation "
-              f"steps ({time.time() - t0:.2f}s wall)")
     else:
-        eng = FlipEngine.build(g, args.algo, mapping=mapping,
-                               mode=args.mode, compact=args.compact)
-        attrs, steps = eng.run_distributed(args.src)
-        print(f"[graph] dist/{args.mode}: fixpoint in {steps} steps "
-              "over local device mesh")
+        plan = flip.plan_from_cli(args.engine, args.mode,
+                                  compact=args.compact)
+        cq = flip.compile(g, args.algo, plan, mapping=mapping)
+        t0 = time.time()
+        res = cq.query(args.src)
+        attrs = res.attrs
+        where = ("local device mesh" if plan.distributed
+                 else f"{time.time() - t0:.2f}s wall")
+        print(f"[graph] {args.engine}/{args.mode}: fixpoint in "
+              f"{res.steps} relaxation steps ({where})")
 
-    if args.updates:
-        g, attrs = _replay_updates(args, g, eng, attrs)
+        if args.updates:
+            g, attrs = _replay_updates(args, g, cq, res)
 
     ref, _ = reference.run(args.algo, g, args.src)
     print(f"[graph] correct vs reference: "
@@ -170,27 +170,22 @@ def _load_update_batches(path):
              for e in batch] for batch in data]
 
 
-def _replay_updates(args, g, eng, attrs):
-    """Apply each update batch and re-solve incrementally: warm start
-    from the previous fixpoint when the batch is monotone under the
-    algebra, full recompute otherwise."""
+def _replay_updates(args, g, cq, res):
+    """Apply each update batch and re-solve incrementally: the session
+    warm-starts from the previous fixpoint when the batch is monotone
+    under the algebra, and falls back to a full recompute otherwise
+    (the plan's warm='auto' policy) -- uniformly for jax and dist."""
     for i, batch in enumerate(_load_update_batches(args.updates)):
-        g = g.apply_updates(batch)
         t0 = time.time()
-        eng, delta = eng.apply_updates(g, batch)
-        if args.engine == "dist":
-            warm = (WarmStart(attrs, delta.affected_src)
-                    if delta.monotone else None)
-            attrs, steps = eng.run_distributed(args.src, warm=warm)
-        else:
-            attrs, steps = eng.run_updated(args.src, attrs, delta)
+        cq, delta = cq.update(batch)
+        res = cq.query(args.src, warm=res)
         print(f"[graph] update[{i}]: {len(batch)} edges -> "
               f"{delta.n_blocks_rebuilt} tiles rebuilt"
               f"{' (shape changed)' if delta.shape_changed else ''}, "
               f"{'warm' if delta.monotone else 'full'} recompute in "
-              f"{steps} steps ({time.time() - t0:.2f}s, "
+              f"{res.steps} steps ({time.time() - t0:.2f}s, "
               f"{len(delta.affected_src)} vertices affected)")
-    return g, attrs
+    return cq.graph, res.attrs
 
 
 def _run_batched(args, g, mapping, srcs) -> bool:
@@ -198,19 +193,21 @@ def _run_batched(args, g, mapping, srcs) -> bool:
     t0 = time.time()
     if args.batch:
         from repro.launch.serve_graph import GraphServer
-        srv = GraphServer(g, batch=args.batch, mode=args.mode,
-                          compact=args.compact, mapping=mapping)
+        plan = flip.plan_from_cli(args.engine, args.mode,
+                                  compact=args.compact,
+                                  batch=args.batch)
+        srv = GraphServer(g, plan=plan, mapping=mapping)
         reqs = srv.serve((args.algo, s) for s in srcs)
         outs = [r.result for r in reqs]
         steps = [r.steps for r in reqs]
         how = (f"{srv.dispatches} serving dispatches of "
                f"B={args.batch}")
     else:
-        eng = FlipEngine.build(g, args.algo, mapping=mapping,
-                               mode=args.mode, compact=args.compact)
-        run = (eng.run_distributed if args.engine == "dist"
-               else eng.run_batch)
-        outs, steps = run(np.asarray(srcs))
+        plan = flip.plan_from_cli(args.engine, args.mode,
+                                  compact=args.compact)
+        res = flip.compile(g, args.algo, plan,
+                           mapping=mapping).query(np.asarray(srcs))
+        outs, steps = res.attrs, res.steps
         how = f"one {args.engine} batch of B={len(srcs)}"
     print(f"[graph] {args.engine}/{args.mode}: {len(srcs)} queries via "
           f"{how}, per-query steps {list(map(int, steps))} "

@@ -1,31 +1,31 @@
 """Graph-query serving front-end: batched multi-query dispatch.
 
-The serving-side counterpart of `FlipEngine.run_batch`: a stream of
+The serving-side counterpart of a batched `CompiledQuery`: a stream of
 (algo, src) requests -- multi-source BFS, landmark SSSP, personalized
 PageRank probes, ... -- is bucketed by vertex algebra and dispatched in
 fixed-size batches, so every dispatch relaxes B independent frontiers
 against one shared weight-block stream (the whole batching win) and hits
-one cached compiled engine per (algebra, mode):
+one cached compiled session per (algebra, graph fingerprint, plan):
 
-  * one `FlipEngine` (block build + jit cache) per algebra, built lazily
-    on first request and reused for the life of the server;
-  * fixed batch size B: partial tail buckets are padded by repeating the
-    last source, so every dispatch reuses the same (B, ntiles, T)
-    executable instead of recompiling per tail size;
+  * one `flip.compile` session (block build + jit cache) per algebra,
+    built lazily on first request and reused for the life of the
+    server; the cache key is (algebra, graph fingerprint, plan), so a
+    wholesale `graph` swap or an out-of-band mutation can never
+    silently serve stale results;
+  * fixed batch size B (`plan.batch`): partial tail buckets are padded
+    by repeating the last source, so every dispatch reuses the same
+    (B, ntiles, T) executable instead of recompiling per tail size;
   * per-request results and step counts are returned in submission
-    order, exactly equal to what a solo `run(src)` would produce
-    (run_batch's per-query convergence mask guarantees bit-for-bit
-    equality).
+    order, exactly equal to what a solo `query(src)` would produce
+    (the per-query convergence mask guarantees bit-for-bit equality).
 
 Streaming mutations interleave with queries: `update(batch)` (or an
-``("update", batch)`` stream item) drains the pending buckets against the
-pre-update graph -- submission order is also graph-version order -- then
-rebuilds every cached engine incrementally through
-`BlockedGraph.apply_updates`. Value-only rebuilds keep all array shapes,
-so the compiled relax executables stay hot; only a batch that activates a
-previously empty tile pair retraces. The engine cache is keyed by the
-graph's content fingerprint, so a wholesale `graph` swap (not just
-`update`) also invalidates it instead of silently serving stale results.
+``("update", batch)`` stream item) drains the pending buckets against
+the pre-update graph -- submission order is also graph-version order --
+then steps every cached session to the new graph version incrementally
+(`CompiledQuery.update`). Value-only rebuilds keep all array shapes, so
+the compiled relax executables stay hot; only a batch that activates a
+previously empty tile pair retraces.
 
 CLI demo (synthetic request stream over one dataset graph):
 
@@ -40,8 +40,9 @@ import time
 
 import numpy as np
 
+from repro import api as flip
 from repro.algebra import ALGEBRAS, get_algebra
-from repro.core.engine import FlipEngine
+from repro.api import CompiledQuery, ExecutionPlan
 from repro.graphs import make_dataset, reference
 from repro.graphs.csr import Graph
 
@@ -62,7 +63,11 @@ class GraphRequest:
 @dataclasses.dataclass
 class GraphServer:
     """Buckets (algo, src) requests per algebra and dispatches fixed-size
-    batches through a compiled-engine cache."""
+    batches through a compiled-session cache.
+
+    Pass a full `plan` (its `batch` is the serving bucket size), or use
+    the per-knob fields (batch/tile/mode/relax_mode/compact) which fold
+    into one plan at construction."""
 
     graph: Graph
     batch: int = 8
@@ -70,14 +75,25 @@ class GraphServer:
     mode: str = "data"
     relax_mode: str = "auto"
     compact: bool | str = "auto"  # frontier-compacted block streaming for
-                                  # every cached engine ('auto' = on for
+                                  # every cached session ('auto' = on for
                                   # data mode); exact, so serving results
                                   # stay bit-for-bit the solo runs
     mapping: object = None       # optional FLIP Mapping: placement-induced
-                                 # block sparsity for every cached engine
+                                 # block sparsity for every cached session
+    plan: ExecutionPlan | None = None   # overrides the per-knob fields
 
     def __post_init__(self):
-        self._engines: dict[str, FlipEngine] = {}
+        if self.plan is None:
+            self.plan = ExecutionPlan(
+                mode=self.mode, relax_mode=self.relax_mode,
+                compact=self.compact, tile=self.tile, batch=self.batch)
+        elif self.plan.batch:
+            self.batch = self.plan.batch
+        else:
+            self.plan = dataclasses.replace(self.plan, batch=self.batch)
+        # sessions keyed by (algo, graph fingerprint, plan): stale graph
+        # versions can never be served, and updates insert fresh keys
+        self._sessions: dict[tuple, CompiledQuery] = {}
         self._buckets: dict[str, list[GraphRequest]] = {}
         self._next_id = 0
         self.dispatches = 0
@@ -85,22 +101,38 @@ class GraphServer:
         self.updates_applied = 0
 
     # ------------------------------------------------------------ #
-    def engine(self, algo: str) -> FlipEngine:
-        """Compiled-engine cache: block build + jit executables are paid
-        once per algebra, then shared by every batch. Keyed by the
-        graph's content fingerprint, not just the algorithm: a cached
-        engine whose layout was built from a different graph (wholesale
-        `srv.graph` swap, mutation applied behind the server's back) is
-        rebuilt instead of silently serving the old graph's results."""
-        fp = self.graph.fingerprint()
-        eng = self._engines.get(algo)
-        if eng is None or eng.bg.graph_fp != fp:
+    def session(self, algo: str) -> CompiledQuery:
+        """Compiled-session cache: block build + jit executables are
+        paid once per (algebra, graph fingerprint, plan), then shared
+        by every batch."""
+        key = (algo, self.graph.fingerprint(), self.plan.key())
+        cq = self._sessions.get(key)
+        if cq is None:
             get_algebra(algo)        # fail fast on unknown algorithms
-            self._engines[algo] = FlipEngine.build(
-                self.graph, algo, mapping=self.mapping, tile=self.tile,
-                mode=self.mode, relax_mode=self.relax_mode,
-                compact=self.compact)
-        return self._engines[algo]
+            # supersede this algebra's sessions for older graph
+            # versions (wholesale swaps would otherwise leak one
+            # BlockedGraph per version for the server's lifetime)
+            for k in [k for k in self._sessions if k[0] == algo]:
+                del self._sessions[k]
+            cq = flip.compile(self.graph, algo, self.plan,
+                              mapping=self.mapping)
+            self._sessions[key] = cq
+        return cq
+
+    def engine(self, algo: str):
+        """The FlipEngine backing this algebra's cached session (legacy
+        accessor; prefer `session`)."""
+        return self.session(algo).engine
+
+    @property
+    def _engines(self) -> dict:
+        """Legacy algo-keyed view of the engines serving the *current*
+        graph version (older sessions are never served)."""
+        fp = self.graph.fingerprint()
+        pk = self.plan.key()
+        return {algo: cq.engine
+                for (algo, f, k), cq in self._sessions.items()
+                if f == fp and k == pk}
 
     # ------------------------------------------------------------ #
     def update(self, updates) -> dict:
@@ -108,19 +140,24 @@ class GraphServer:
 
         Pending buckets are drained first, so every already-submitted
         query runs against the graph version current at its submission.
-        Each cached engine is then re-blocked incrementally
-        (`FlipEngine.apply_updates`): only the touched tiles are
-        recomputed, and value-only rebuilds reuse every compiled
+        Each cached session is then stepped to the new graph version
+        incrementally (`CompiledQuery.update`): only the touched tiles
+        are recomputed, and value-only rebuilds reuse every compiled
         executable (shapes unchanged) -- only a shape-changing rebuild
         (previously empty tile pair activated) retraces on its next
         dispatch. Returns the per-algebra `UpdateDelta`s."""
         self.drain()
-        updates = list(updates)    # consumed once per cached engine
+        updates = list(updates)    # consumed once per cached session
         g2 = self.graph.apply_updates(updates)
+        old_fp, pk = self.graph.fingerprint(), self.plan.key()
         deltas = {}
-        for algo, eng in list(self._engines.items()):
-            self._engines[algo], deltas[algo] = eng.apply_updates(
-                g2, updates)
+        for (algo, fp, k), cq in list(self._sessions.items()):
+            if fp != old_fp or k != pk:
+                del self._sessions[(algo, fp, k)]   # prune stale versions
+                continue
+            cq2, deltas[algo] = cq.update(updates, new_graph=g2)
+            del self._sessions[(algo, fp, k)]
+            self._sessions[(algo, g2.fingerprint(), k)] = cq2
         self.graph = g2
         self.updates_applied += 1
         return deltas
@@ -161,15 +198,15 @@ class GraphServer:
     # ------------------------------------------------------------ #
     def _dispatch(self, algo: str) -> None:
         reqs, self._buckets[algo] = self._buckets[algo], []
-        # pad the tail bucket to the fixed batch size with a repeat of
-        # the last source: same (B, ntiles, T) shapes -> jit cache hit
-        srcs = [r.src for r in reqs]
-        srcs += [srcs[-1]] * (self.batch - len(srcs))
-        outs, steps = self.engine(algo).run_batch(np.asarray(srcs))
+        # the session's plan.batch pads the tail bucket to the fixed
+        # batch size (repeat of the last source): same (B, ntiles, T)
+        # shapes -> jit cache hit, padded rows dropped
+        res = self.session(algo).query(
+            np.asarray([r.src for r in reqs]))
         for b, req in enumerate(reqs):
-            req.result = outs[b]
-            req.steps = int(steps[b])
-        self.dispatches += 1
+            req.result = res.attrs[b]
+            req.steps = int(res.steps[b])
+        self.dispatches += res.dispatches
         self.completed += len(reqs)
 
 
@@ -237,10 +274,11 @@ def main():
         snapshots.append(g_cur)
 
     compact = {"auto": "auto", "on": True, "off": False}[args.compact]
-    srv = GraphServer(g, batch=args.batch, tile=args.tile, mode=args.mode,
-                      compact=compact)
+    plan = ExecutionPlan(mode=args.mode, compact=compact, tile=args.tile,
+                         batch=args.batch)
+    srv = GraphServer(g, plan=plan)
     for a in algos:                      # build/compile outside the clock
-        srv.engine(a)
+        srv.session(a)
     t0 = time.time()
     reqs = srv.serve(stream)
     wall = time.time() - t0

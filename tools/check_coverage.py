@@ -16,10 +16,12 @@ import sys
 # package prefix -> minimum percent line coverage (tier-1 suite, CPU).
 # Recorded from a settrace line-coverage measurement of a representative
 # suite subset (measured: algebra 97%, core 95%, graphs 98%,
-# kernels/frontier 90%), floored ~5 points down for tool/denominator
-# differences between that measurement and coverage.py.
+# kernels/frontier 90%, api 87% under tests/test_api.py alone), floored
+# ~5 points down for tool/denominator differences between that
+# measurement and coverage.py.
 BASELINES = {
     "src/repro/algebra/": 90.0,
+    "src/repro/api/": 80.0,
     "src/repro/core/": 85.0,
     "src/repro/graphs/": 90.0,
     "src/repro/kernels/frontier/": 85.0,
