@@ -1,0 +1,89 @@
+"""Telemetry-overhead guard: tracing must stay cheap enough to leave on.
+
+Times steady-state (post-compile) BFS queries with ``trace=`` off vs on
+through both local fixpoints -- the on-device `lax.while_loop` (dense
+streaming) and the host-driven compacted loop -- and fails (exit 1)
+when either traced/untraced wall ratio exceeds ``--max-ratio``
+(default 1.10, the documented <=10% bound). The graph is sized so the
+relax work dominates the fixed-shape stat-buffer writes; medians over
+several repeats keep the ratio robust to scheduler noise. Rows append
+to BENCH_telemetry.json, so the overhead trajectory is recorded
+alongside the kernel benches.
+
+CI runs this as the `telemetry-overhead-smoke` job:
+
+  BENCH_FAST=1 PYTHONPATH=src:. python -m \
+      benchmarks.bench_telemetry_overhead --max-ratio 1.10
+"""
+from __future__ import annotations
+
+import argparse
+import os
+import time
+
+import numpy as np
+
+from benchmarks.common import RESULTS, emit, write_json
+from repro import api as flip
+from repro.graphs import make_power_law
+
+
+def _steady(fn, repeats: int) -> float:
+    """Median wall of `repeats` calls (the executable is already warm)."""
+    walls = []
+    for _ in range(repeats):
+        t0 = time.perf_counter()
+        fn()
+        walls.append(time.perf_counter() - t0)
+    return float(np.median(walls))
+
+
+def run(max_ratio: float = 1.10) -> float:
+    """Benches both fixpoints; returns the worst traced/untraced ratio."""
+    fast = bool(os.environ.get("BENCH_FAST"))
+    n, m = (1024, 4096) if fast else (4096, 16384)
+    repeats = 7 if fast else 11
+    g = make_power_law(n, m, seed=0)
+    worst = 0.0
+    paths = [
+        ("while_loop", flip.ExecutionPlan(compact=False)),   # device loop
+        ("host_compact", flip.ExecutionPlan(compact=True)),  # host loop
+    ]
+    for label, plan in paths:
+        cq = flip.compile(g, "bfs", plan)
+        cq.query(0)                     # warm the untraced executable
+        cq.query(0, trace=True)         # warm the traced one
+        off = _steady(lambda: cq.query(0), repeats)
+        on = _steady(lambda: cq.query(0, trace=True), repeats)
+        ratio = on / off
+        emit(f"telemetry_overhead_{label}_off", off * 1e6,
+             f"steady-state BFS |V|={n} |E|={g.m}, trace off")
+        emit(f"telemetry_overhead_{label}_on", on * 1e6, "trace=True")
+        emit(f"telemetry_overhead_{label}_ratio", ratio,
+             f"traced/untraced wall (guard <= {max_ratio:.2f})")
+        worst = max(worst, ratio)
+    return worst
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--max-ratio", type=float, default=1.10,
+                    help="fail when traced/untraced steady-state wall "
+                         "exceeds this on either fixpoint path")
+    args = ap.parse_args()
+    start = len(RESULTS)
+    worst = None
+    try:
+        worst = run(args.max_ratio)
+    finally:
+        write_json("telemetry", rows=RESULTS[start:])
+    print(f"[bench] worst tracing overhead ratio {worst:.3f} "
+          f"(bound {args.max_ratio:.2f})")
+    if worst > args.max_ratio:
+        raise SystemExit(
+            f"telemetry overhead {worst:.3f}x exceeds the "
+            f"{args.max_ratio:.2f}x bound")
+
+
+if __name__ == "__main__":
+    main()

@@ -4,17 +4,53 @@ Every `emit` prints the historical ``name,us_per_call,derived`` CSV row
 AND records it in an in-process results list; `write_json(tag)` appends
 the rows collected so far as one run record to ``BENCH_<tag>.json``
 (under ``$BENCH_OUT`` if set, else the cwd). The file is append-safe --
-each invocation adds a ``{"ts", "rows"}`` entry to the ``runs`` list
-instead of overwriting history -- so repo-root files and CI artifacts
-accumulate the perf trajectory across runs.
+each invocation adds a ``{"ts", "meta", "rows"}`` entry to the ``runs``
+list instead of overwriting history -- so repo-root files and CI
+artifacts accumulate the perf trajectory across runs, and ``meta``
+(`run_meta()`: git SHA, hostname, jax version, device kind) keeps every
+recorded row attributable to the code and machine that produced it.
 """
 from __future__ import annotations
 
+import functools
 import json
 import os
+import platform
+import socket
+import subprocess
+import sys
 import time
 
 RESULTS: list[dict] = []
+
+
+@functools.lru_cache(maxsize=1)
+def run_meta() -> dict:
+    """Provenance stamped into every recorded run: git SHA, hostname,
+    platform, python/jax versions, and the JAX device kind. Every probe
+    is best-effort -- a bench run must never fail on metadata."""
+    meta = {
+        "hostname": socket.gethostname(),
+        "platform": platform.platform(),
+        "python": sys.version.split()[0],
+    }
+    try:
+        meta["git_sha"] = subprocess.run(
+            ["git", "rev-parse", "HEAD"], capture_output=True, text=True,
+            timeout=10, cwd=os.path.dirname(os.path.abspath(__file__)),
+        ).stdout.strip() or None
+    except Exception:
+        meta["git_sha"] = None
+    try:
+        import jax
+        meta["jax"] = jax.__version__
+        dev = jax.devices()[0]
+        meta["device_kind"] = dev.device_kind
+        meta["backend"] = dev.platform
+        meta["device_count"] = jax.device_count()
+    except Exception:
+        meta["jax"] = None
+    return dict(meta)
 
 
 def emit(name: str, us_per_call: float, derived: str = ""):
@@ -50,7 +86,8 @@ def write_json(tag: str, rows: list[dict] | None = None) -> str:
                 runs.insert(0, {"rows": old["rows"]})
         except (json.JSONDecodeError, OSError):
             pass                           # corrupt history: start fresh
-    runs.append({"ts": time.strftime("%Y-%m-%dT%H:%M:%S"), "rows": rows})
+    runs.append({"ts": time.strftime("%Y-%m-%dT%H:%M:%S"),
+                 "meta": run_meta(), "rows": rows})
     tmp = path + ".tmp"
     with open(tmp, "w") as f:
         json.dump({"tag": tag, "runs": runs}, f, indent=1)

@@ -19,8 +19,10 @@ from repro.api.plan import (ExecutionPlan, plan_from_cli,
 from repro.api.program import Program
 from repro.api.session import CompiledQuery, QueryResult, compile
 from repro.core.engine import WarmStart
+from repro.obs.telemetry import DispatchTelemetry, QueryTelemetry
 
 __all__ = [
     "ExecutionPlan", "Program", "CompiledQuery", "QueryResult",
     "WarmStart", "compile", "plan_from_cli", "resolve_cli_engine",
+    "QueryTelemetry", "DispatchTelemetry",
 ]

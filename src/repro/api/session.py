@@ -30,6 +30,7 @@ from repro.api.program import Program
 from repro.core.engine import FlipEngine, WarmStart
 from repro.graphs.csr import Graph
 from repro.kernels.frontier.ops import UpdateDelta
+from repro.obs.telemetry import QueryTelemetry
 
 
 @dataclasses.dataclass
@@ -38,7 +39,16 @@ class QueryResult:
     scalar source, (B, n) for a batch), per-query relaxation step
     counts (int / (B,) to match), the sources as queried, the resolved
     plan that produced it, and wall seconds. Usable directly as the
-    `warm=` argument of a post-update `query` call."""
+    `warm=` argument of a post-update `query` call.
+
+    `compile_s` is the share of `wall_s` attributed to one-time jit
+    tracing: the session tracks which dispatch signatures (solo /
+    batch-of-B) it has executed before, and the full wall of each
+    first-of-its-signature dispatch lands here -- so steady-state
+    latency accounting (server histograms, benches) reads
+    ``wall_s - compile_s`` and is never polluted by the first query's
+    trace cost. `telemetry` is set iff the query ran with ``trace=``:
+    per-dispatch, per-step frontier records (see `repro.obs`)."""
 
     attrs: np.ndarray
     steps: int | np.ndarray
@@ -48,6 +58,8 @@ class QueryResult:
     graph: Graph
     wall_s: float = 0.0
     dispatches: int = 1
+    compile_s: float = 0.0
+    telemetry: QueryTelemetry | None = None
 
     @property
     def batched(self) -> bool:
@@ -75,26 +87,41 @@ class CompiledQuery:
     delta: UpdateDelta | None = None   # set by update(): the last batch
     prev_fp: str | None = None         # fingerprint of the pre-update
                                        # graph the delta resumes from
+    # dispatch signatures this session has executed: a signature's first
+    # dispatch pays the one-time jit trace, so its wall is attributed to
+    # QueryResult.compile_s. Shared across update()-derived sessions
+    # (value-only rebuilds keep the compiled executables hot).
+    _dispatched: set = dataclasses.field(default_factory=set, repr=False)
 
     # -------------------------------------------------------------- #
-    def query(self, srcs, *, warm=None) -> QueryResult:
+    def query(self, srcs, *, warm=None, trace: bool | int = False) \
+            -> QueryResult:
         """Run the program from `srcs` under the session's plan.
 
-        srcs -- one source vertex (scalar result shapes) or a sequence
-                of B independent sources (batched shapes). With
-                plan.batch = B > 0, longer sequences dispatch in padded
-                fixed-size buckets of B (every dispatch reuses one
-                compiled executable -- the serving policy); with
-                plan.batch = 0 the whole sequence is one fixpoint.
-        warm -- resume from a prior converged result: a `QueryResult`
-                for the same sources on the pre-update session (the
-                session's last `update` delta decides soundness under
-                plan.warm policy), or an explicit `WarmStart`.
+        srcs  -- one source vertex (scalar result shapes) or a sequence
+                 of B independent sources (batched shapes). With
+                 plan.batch = B > 0, longer sequences dispatch in padded
+                 fixed-size buckets of B (every dispatch reuses one
+                 compiled executable -- the serving policy); with
+                 plan.batch = 0 the whole sequence is one fixpoint.
+        warm  -- resume from a prior converged result: a `QueryResult`
+                 for the same sources on the pre-update session (the
+                 session's last `update` delta decides soundness under
+                 plan.warm policy), or an explicit `WarmStart`.
+        trace -- per-step frontier tracing (see `repro.obs`): True, or
+                 an int row capacity. The result's `telemetry` then
+                 holds one `DispatchTelemetry` per engine dispatch.
+                 Tracing is exact: attrs and steps are bit-identical to
+                 the untraced run.
 
         Every combination returns bit-for-bit the attrs a plain scratch
         scalar run would produce.
         """
         t0 = time.perf_counter()
+        if trace and self.plan.distributed:
+            raise ValueError(
+                "query(trace=...) is not supported on a distributed "
+                "plan yet; trace on a local plan")
         batched = bool(np.ndim(srcs))
         if batched and len(np.atleast_1d(srcs)) == 0:
             # degenerate empty batch: well-formed empty shapes (the
@@ -104,46 +131,83 @@ class CompiledQuery:
                 steps=np.zeros(0, dtype=np.int32),
                 srcs=np.zeros(0, dtype=np.int64), plan=self.plan,
                 program=self.program, graph=self.graph,
-                wall_s=time.perf_counter() - t0, dispatches=0)
+                wall_s=time.perf_counter() - t0, dispatches=0,
+                telemetry=QueryTelemetry([]) if trace else None)
         ws = self._resolve_warm(warm, srcs)
+        teles: list = []
+        compile_s = 0.0
         if not batched or self.plan.batch == 0:
-            out, steps = self.engine.execute(
-                srcs, warm=ws, distributed=self.plan.distributed,
-                mesh=self.plan.mesh, axis=self.plan.mesh_axis)
+            out, steps, tele, wall, first = self._dispatch(srcs, ws, trace)
             dispatches = 1
+            compile_s = wall if first else 0.0
+            if tele is not None:
+                teles.append(tele)
         else:
             # every batched query pads to fixed-size buckets of
             # plan.batch -- a short sequence too, so each dispatch
             # reuses one (B, ntiles, T) executable regardless of the
             # caller's tail size
-            out, steps, dispatches = self._query_bucketed(
-                np.atleast_1d(np.asarray(srcs, dtype=np.int64)), ws)
+            out, steps, dispatches, teles, compile_s = \
+                self._query_bucketed(
+                    np.atleast_1d(np.asarray(srcs, dtype=np.int64)),
+                    ws, trace)
+        wall_s = time.perf_counter() - t0
+        telemetry = None
+        if trace:
+            telemetry = QueryTelemetry(dispatches=teles, wall_s=wall_s,
+                                       compile_s=compile_s)
         return QueryResult(attrs=out, steps=steps,
                            srcs=(np.asarray(srcs) if batched
                                  else int(srcs)),
                            plan=self.plan, program=self.program,
-                           graph=self.graph,
-                           wall_s=time.perf_counter() - t0,
-                           dispatches=dispatches)
+                           graph=self.graph, wall_s=wall_s,
+                           dispatches=dispatches, compile_s=compile_s,
+                           telemetry=telemetry)
 
-    def _query_bucketed(self, srcs, ws):
+    def _dispatch(self, srcs, ws, trace):
+        """One engine dispatch with compile-time attribution: returns
+        ``(out, steps, DispatchTelemetry | None, wall_s, first)`` where
+        `first` marks the first dispatch of this signature (its wall
+        includes the one-time jit trace)."""
+        # tracing rides extra stat buffers through the fixpoint carry,
+        # so traced and untraced runs are distinct executables
+        sig = ("solo" if not np.ndim(srcs) else len(srcs),
+               self.plan.distributed, bool(trace))
+        first = sig not in self._dispatched
+        t0 = time.perf_counter()
+        r = self.engine.execute(
+            srcs, warm=ws, distributed=self.plan.distributed,
+            mesh=self.plan.mesh, axis=self.plan.mesh_axis, trace=trace)
+        wall = time.perf_counter() - t0
+        self._dispatched.add(sig)
+        out, steps = r[0], r[1]
+        tele = r[2] if trace else None
+        if tele is not None:
+            tele.wall_s = wall
+        return out, steps, tele, wall, first
+
+    def _query_bucketed(self, srcs, ws, trace):
         """plan.batch-sized dispatch: pad the tail bucket by repeating
         its last source so every dispatch shares one (B, ntiles, T)
         executable, then drop the padded rows."""
         nb = self.plan.batch
-        outs, steps, dispatches = [], [], 0
+        outs, steps, dispatches, teles = [], [], 0, []
+        compile_s = 0.0
         for i in range(0, len(srcs), nb):
             chunk = srcs[i:i + nb]
             padded = np.concatenate(
                 [chunk, np.repeat(chunk[-1:], nb - len(chunk))])
             w = self._slice_warm(ws, i, len(chunk), nb)
-            o, s = self.engine.execute(
-                padded, warm=w, distributed=self.plan.distributed,
-                mesh=self.plan.mesh, axis=self.plan.mesh_axis)
+            o, s, tele, wall, first = self._dispatch(padded, w, trace)
+            if first:
+                compile_s += wall
+            if tele is not None:
+                teles.append(tele)
             outs.append(o[:len(chunk)])
             steps.append(s[:len(chunk)])
             dispatches += 1
-        return (np.concatenate(outs), np.concatenate(steps), dispatches)
+        return (np.concatenate(outs), np.concatenate(steps), dispatches,
+                teles, compile_s)
 
     @staticmethod
     def _slice_warm(ws, i, k, nb):

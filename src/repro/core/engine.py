@@ -52,6 +52,7 @@ from __future__ import annotations
 
 import dataclasses
 import functools
+import time
 import warnings
 
 import jax
@@ -65,7 +66,15 @@ from repro.core.mapping import Mapping
 from repro.graphs.csr import Graph
 from repro.kernels.frontier.ops import (BlockedGraph, UpdateDelta,
                                         build_blocks, frontier_relax,
-                                        resolve_relax_mode)
+                                        resolve_relax_mode, tile_activity)
+from repro.obs.telemetry import DispatchTelemetry, StepTrace
+
+# default per-step trace row capacity (`execute(trace=True)`): enough for
+# any realistic fixpoint (diameters are O(100) even on road networks)
+# while keeping the traced stat buffers a few hundred KB. Pass an int as
+# `trace` to override; steps beyond the capacity still execute exactly
+# (only their trace rows are dropped, flagged `truncated`).
+TRACE_CAP_DEFAULT = 4096
 
 
 @dataclasses.dataclass
@@ -171,26 +180,67 @@ class FlipEngine:
         return attrs, aux, jnp.asarray(
             frontier.reshape(b, bg.ntiles, bg.tile))
 
-    def _step(self, attrs, aux, frontier):
+    def _step(self, attrs, aux, frontier, with_stats: bool = False):
         alg = self.algebra
         sv, carry = alg.scatter_carry_jnp(attrs, frontier,
                                           op_mode=(self.mode == "op"))
         new = frontier_relax(sv, carry, self.bg, mode=self.relax_mode,
                              compact=self._use_compact)
-        return alg.post_step_jnp(attrs, aux, sv, new)
+        out = alg.post_step_jnp(attrs, aux, sv, new)
+        if not with_stats:
+            return out
+        return out, self._step_stats_jit()(sv, frontier)
 
-    def _masked_step(self, attrs, aux, frontier, live):
+    def _step_stats(self, sv, frontier):
+        """One trace row's worth of per-step stats, computed from the
+        exact quantities the compaction machinery derives anyway: the
+        frontier entering the step, the per-tile activity of the
+        scattered source values (the kernel's packet-trigger condition),
+        and the resulting active-block count. Pure extra outputs -- the
+        step math never reads them, so traced runs stay bit-identical.
+
+        Returns ``(active_vertices (B,), active_tiles (), fetched ())``
+        as i32; `fetched` is the blocks streamed from HBM this step
+        (active blocks under compaction, all blocks under dense)."""
+        bg = self.bg
+        act = tile_activity(sv, bg.semiring)                # (ntiles,)
+        active_tiles = jnp.sum(act.astype(jnp.int32))
+        nb = bg.bsrc.shape[0]
+        if self._use_compact:
+            fetched = jnp.sum(jnp.take(act, bg.bsrc).astype(jnp.int32))
+        else:
+            fetched = jnp.int32(nb)
+        active_v = jnp.sum(frontier, axis=(1, 2)).astype(jnp.int32)
+        return active_v, active_tiles, fetched
+
+    def _step_stats_jit(self):
+        """`_step_stats` as one cached jitted dispatch: the host-driven
+        fixpoint runs its step eagerly (it must read concrete frontiers),
+        so fusing the half-dozen stat reductions into a single call keeps
+        traced host steps within the overhead bound. Inside the jitted
+        while_loop body the same tracing inlines and the wrapper is
+        free."""
+        fn = self.__dict__.get("_step_stats_fn")
+        if fn is None:
+            fn = self.__dict__["_step_stats_fn"] = jax.jit(self._step_stats)
+        return fn
+
+    def _masked_step(self, attrs, aux, frontier, live,
+                     with_stats: bool = False):
         """One relax step with the per-query convergence freeze applied:
         queries whose frontier emptied (`live` (B,) bool) keep their
         state untouched. The single body behind both fixpoint drivers,
         so host-driven and while_loop runs stay bit-for-bit identical."""
-        attrs_n, aux_n, frontier_n = self._step(attrs, aux, frontier)
+        stepped = self._step(attrs, aux, frontier, with_stats=with_stats)
+        (attrs_n, aux_n, frontier_n), stats = \
+            stepped if with_stats else (stepped, None)
         m = live[:, None, None]
-        return (jnp.where(m, attrs_n, attrs),
-                jnp.where(m, aux_n, aux),
-                jnp.logical_and(frontier_n, m))
+        out = (jnp.where(m, attrs_n, attrs),
+               jnp.where(m, aux_n, aux),
+               jnp.logical_and(frontier_n, m))
+        return (out, stats) if with_stats else out
 
-    def _fixpoint(self, attrs0, aux0, frontier0):
+    def _fixpoint(self, attrs0, aux0, frontier0, trace_cap: int = 0):
         """Shared (B, ntiles, T) while_loop with per-query convergence
         masking: a query whose frontier emptied is frozen, so late
         queries in the batch cannot perturb finished ones (op-mode
@@ -200,50 +250,146 @@ class FlipEngine:
         Compacted jnp streaming needs concrete frontiers (the active
         block count picks the bucket size), which a traced while_loop
         cannot provide -- that combination drives the same body from the
-        host instead."""
+        host instead.
+
+        `trace_cap > 0` additionally records one per-step stats row into
+        fixed-shape (trace_cap, ...) buffers riding the carry (see
+        `_step_stats`); returns ``(attrs, aux, steps, trace)`` where
+        `trace` is a `(StepTrace, truncated)` pair, or None when
+        tracing is off. The stat buffers are write-only extra outputs,
+        so attrs and step counts are bit-identical either way."""
         if self._use_compact and self._resolved_relax_mode() == "jnp":
-            return self._fixpoint_host(attrs0, aux0, frontier0)
+            return self._fixpoint_host(attrs0, aux0, frontier0, trace_cap)
+        out = self._dense_fixpoint_jit(trace_cap)(attrs0, aux0, frontier0)
+        attrs, aux, steps = out[0], out[1], out[3]
+        if not trace_cap:
+            return attrs, aux, steps, None
+        n_iter = int(out[4])
+        rows = min(n_iter, trace_cap)
+        b_av, b_at, b_bf, b_cv = (np.asarray(x)[:rows] for x in out[5])
+        nb = int(self.bg.bsrc.shape[0])
+        trace = StepTrace(active_vertices=b_av, active_tiles=b_at,
+                          blocks_fetched=b_bf,
+                          blocks_skipped=np.int32(nb) - b_bf,
+                          converged=b_cv)
+        return attrs, aux, steps, (trace, n_iter > trace_cap)
+
+    def _dense_fixpoint_jit(self, trace_cap: int):
+        """The whole dense while_loop compiled as ONE jitted program per
+        (engine, trace_cap), cached on the instance: eager per-call
+        dispatch of the loop would otherwise dominate the step cost (and
+        blow the traced/untraced overhead bound). The traced variant only
+        adds fixed-shape stat-buffer writes to the carry, so both compile
+        to the same fused step with tracing as a few extra reductions."""
+        cache = self.__dict__.setdefault("_fixpoint_cache", {})
+        fn = cache.get(trace_cap)
+        if fn is not None:
+            return fn
 
         def cond(state):
-            _, _, frontier, steps = state
+            frontier, steps = state[2], state[3]
             return jnp.logical_and(frontier.any(),
                                    steps.max() < self.max_steps)
 
         def body(state):
-            attrs, aux, frontier, steps = state
+            attrs, aux, frontier, steps = state[:4]
             live = frontier.any(axis=(1, 2))          # (B,) per query
-            attrs, aux, frontier = self._masked_step(attrs, aux,
-                                                     frontier, live)
-            return attrs, aux, frontier, steps + live.astype(jnp.int32)
+            if not trace_cap:
+                attrs, aux, frontier = self._masked_step(attrs, aux,
+                                                         frontier, live)
+                return attrs, aux, frontier, steps + live.astype(jnp.int32)
+            it, (b_av, b_at, b_bf, b_cv) = state[4], state[5]
+            (attrs, aux, frontier), (av, at, bf) = self._masked_step(
+                attrs, aux, frontier, live, with_stats=True)
+            # rows past the capacity are dropped, not wrapped: the trace
+            # stays a prefix of the run and `truncated` flags the cut
+            bufs = (b_av.at[it].set(av, mode="drop"),
+                    b_at.at[it].set(at, mode="drop"),
+                    b_bf.at[it].set(bf, mode="drop"),
+                    b_cv.at[it].set(~live, mode="drop"))
+            return (attrs, aux, frontier, steps + live.astype(jnp.int32),
+                    it + 1, bufs)
 
-        steps0 = jnp.zeros(attrs0.shape[0], jnp.int32)
-        attrs, aux, _, steps = jax.lax.while_loop(
-            cond, body, (attrs0, aux0, frontier0, steps0))
-        return attrs, aux, steps
+        @jax.jit
+        def run(attrs0, aux0, frontier0):
+            b = attrs0.shape[0]
+            state0 = (attrs0, aux0, frontier0, jnp.zeros(b, jnp.int32))
+            if trace_cap:
+                bufs0 = (jnp.zeros((trace_cap, b), jnp.int32),
+                         jnp.zeros((trace_cap,), jnp.int32),
+                         jnp.zeros((trace_cap,), jnp.int32),
+                         jnp.zeros((trace_cap, b), bool))
+                state0 = state0 + (jnp.int32(0), bufs0)
+            return jax.lax.while_loop(cond, body, state0)
 
-    def _fixpoint_host(self, attrs, aux, frontier):
+        cache[trace_cap] = run
+        return run
+
+    def _fixpoint_host(self, attrs, aux, frontier, trace_cap: int = 0):
         """Host-driven fixpoint for compacted jnp streaming: identical
         body semantics to the while_loop above (same live-mask freezing,
         same step accounting -- bit-for-bit results), but each step reads
         the concrete frontier so `frontier_relax` can bucket the
         compacted block list and the step cost follows the live frontier
-        instead of the full block count."""
+        instead of the full block count.
+
+        With `trace_cap`, stats rows are recorded host-side -- and since
+        this loop observes every step from the host anyway, it also
+        records real per-step wall times (`StepTrace.step_wall_s`),
+        which the on-device while_loop cannot."""
         steps = np.zeros(attrs.shape[0], np.int32)
+        rows: list[tuple] = []
+        walls: list[float] = []
+        n_iter = 0
+        t0 = time.perf_counter()
         while True:
+            # this concrete read is the loop's natural per-step sync: it
+            # also closes the previous traced step's wall measurement, so
+            # tracing adds no extra host<->device round trips
             live = np.asarray(frontier.any(axis=(1, 2)))
+            if len(walls) < len(rows):
+                walls.append(time.perf_counter() - t0)
             if not live.any() or int(steps.max()) >= self.max_steps:
                 break
-            attrs, aux, frontier = self._masked_step(attrs, aux, frontier,
-                                                     jnp.asarray(live))
+            t0 = time.perf_counter()
+            if trace_cap:
+                (attrs, aux, frontier), st = self._masked_step(
+                    attrs, aux, frontier, jnp.asarray(live),
+                    with_stats=True)
+                if n_iter < trace_cap:
+                    # stats stay on device until after the loop: only
+                    # the row tuple is kept per step
+                    av, at, bf = st
+                    rows.append((av, at, bf, ~live))
+            else:
+                attrs, aux, frontier = self._masked_step(
+                    attrs, aux, frontier, jnp.asarray(live))
             steps = steps + live.astype(np.int32)
-        return attrs, aux, jnp.asarray(steps)
+            n_iter += 1
+        if not trace_cap:
+            return attrs, aux, jnp.asarray(steps), None
+        b = int(attrs.shape[0])
+        nb = int(self.bg.bsrc.shape[0])
+        bf = np.asarray([int(r[2]) for r in rows], dtype=np.int32)
+        trace = StepTrace(
+            active_vertices=(np.stack([np.asarray(r[0]) for r in rows])
+                             .astype(np.int32) if rows
+                             else np.zeros((0, b), np.int32)),
+            active_tiles=np.asarray([int(r[1]) for r in rows],
+                                    dtype=np.int32),
+            blocks_fetched=bf,
+            blocks_skipped=np.int32(nb) - bf,
+            converged=(np.stack([r[3] for r in rows]) if rows
+                       else np.zeros((0, b), bool)),
+            step_wall_s=np.asarray(walls, dtype=np.float64))
+        return attrs, aux, jnp.asarray(steps), (trace, n_iter > trace_cap)
 
     # -------------------------------------------------------------- #
     # the one plan-driven executor
     # -------------------------------------------------------------- #
     def execute(self, srcs, *, warm: WarmStart | None = None,
                 distributed: bool = False, mesh: Mesh | None = None,
-                axis: str = "data"):
+                axis: str = "data", trace: bool | int = False):
         """The single execution entry point every layer drives.
 
         One call uniformly covers what used to be four methods: a scalar
@@ -256,6 +402,13 @@ class FlipEngine:
         axes -- batching, distribution, and warm starts never change the
         fixpoint, only how it is reached.
 
+        `trace` turns on per-step frontier tracing (True = the default
+        `TRACE_CAP_DEFAULT` row capacity, an int = that capacity) and
+        makes the call return ``(out, steps, DispatchTelemetry)``
+        instead of ``(out, steps)``; results and step counts are
+        bit-identical with tracing on. Tracing the shard_map fixpoint is
+        not supported yet.
+
         `repro.api.CompiledQuery` is the intended driver: it resolves an
         `ExecutionPlan` into these arguments. The legacy `run*` methods
         are deprecated shims over this method.
@@ -263,11 +416,26 @@ class FlipEngine:
         batched = bool(np.ndim(srcs))
         srcs = np.atleast_1d(np.asarray(srcs, dtype=np.int64))
         if distributed:
+            if trace:
+                raise ValueError(
+                    "per-step tracing is not supported on the "
+                    "distributed (shard_map) fixpoint yet; run the "
+                    "trace on a local plan")
             out, steps = self._execute_distributed(srcs, warm=warm,
                                                    mesh=mesh, axis=axis)
+            tele = None
         else:
-            out, steps = self._execute_local(srcs, warm=warm)
-        return (out, steps) if batched else (out[0], int(steps[0]))
+            out, steps, tele = self._execute_local(
+                srcs, warm=warm, trace_cap=self._trace_cap(trace))
+        r = (out, steps) if batched else (out[0], int(steps[0]))
+        return r + (tele,) if trace else r
+
+    def _trace_cap(self, trace: bool | int) -> int:
+        """0 (off) or the per-step trace row capacity."""
+        if not trace:
+            return 0
+        cap = TRACE_CAP_DEFAULT if trace is True else int(trace)
+        return max(1, min(cap, self.max_steps))
 
     def resolve_warm(self, prev, delta: UpdateDelta) -> WarmStart | None:
         """Warm-start dispatch after `apply_updates`: a `delta.monotone`
@@ -279,12 +447,27 @@ class FlipEngine:
                              seeds=delta.affected_src)
         return None
 
-    def _execute_local(self, srcs, warm: WarmStart | None = None):
-        """Local fixpoint over a (B,) source array; always batched."""
+    def _execute_local(self, srcs, warm: WarmStart | None = None,
+                       trace_cap: int = 0):
+        """Local fixpoint over a (B,) source array; always batched.
+        Returns ``(out, steps, DispatchTelemetry | None)``."""
         attrs0, aux0, frontier0 = self.initial_state(srcs, warm=warm)
-        attrs, aux, steps = self._fixpoint(attrs0, aux0, frontier0)
-        return (self.bg.to_orig(self.algebra.finalize(attrs, aux)),
-                np.asarray(steps))
+        t0 = time.perf_counter()
+        attrs, aux, steps, rec = self._fixpoint(attrs0, aux0, frontier0,
+                                                trace_cap)
+        out = self.bg.to_orig(self.algebra.finalize(attrs, aux))
+        steps = np.asarray(steps)
+        tele = None
+        if rec is not None:
+            trace, truncated = rec
+            tele = DispatchTelemetry(
+                backend=self._resolved_relax_mode(), mode=self.mode,
+                compact=self._use_compact, batch=int(steps.shape[0]),
+                n=self.bg.n, ntiles=self.bg.ntiles,
+                n_blocks=int(self.bg.bsrc.shape[0]), steps=steps,
+                trace=trace, wall_s=time.perf_counter() - t0,
+                truncated=truncated)
+        return out, steps, tele
 
     # -------------------------------------------------------------- #
     # streaming graph mutations: delta-driven incremental recompute

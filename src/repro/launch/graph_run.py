@@ -70,6 +70,11 @@ def main():
                          "start when monotone under the algebra, full "
                          "recompute otherwise). jax/dist engines only.")
     ap.add_argument("--effort", type=int, default=1)
+    ap.add_argument("--trace", default=None, metavar="FILE",
+                    help="write a Chrome-trace JSON (chrome://tracing / "
+                         "Perfetto) of the run: per-step frontier spans "
+                         "for the jax engine, cycle-level parallelism "
+                         "re-emitted through the same schema for sim")
     args = ap.parse_args()
     args.compact = {"auto": "auto", "on": True, "off": False}[args.compact]
 
@@ -90,6 +95,14 @@ def main():
         raise SystemExit("--updates replays mutations through the "
                          "incremental engines; use it with --engine "
                          "jax/dist and a single --src")
+    if args.trace and args.engine == "dist":
+        raise SystemExit("--trace needs --engine sim/jax (per-step "
+                         "tracing is not supported on the distributed "
+                         "fixpoint yet)")
+    if args.trace and args.batch:
+        raise SystemExit("--trace traces one query/fixpoint; drop "
+                         "--batch (use serve_graph --stats for serving "
+                         "telemetry)")
 
     g = next(make_dataset(args.dataset, 1, seed0=args.graph_seed))
     print(f"[graph] {args.dataset}: |V|={g.n} |E|={g.m}")
@@ -111,6 +124,13 @@ def main():
                 "merge); use --engine jax/dist")
         r = simulate(mapping, PROGRAMS[args.algo], src=args.src)
         attrs = r.attrs
+        if args.trace:
+            from repro.obs import from_sim, write_chrome_trace
+            tele = from_sim(r, freq_mhz=mapping.arch.freq_mhz)
+            write_chrome_trace(args.trace, tele,
+                               name=f"sim:{args.algo}")
+            print(f"[graph] trace: {len(tele.dispatches[0].trace)} "
+                  f"cycle spans -> {args.trace}")
         mteps = g.m / (r.cycles / mapping.arch.freq_mhz)
         print(f"[graph] sim: {r.cycles} cycles "
               f"({r.cycles / mapping.arch.freq_mhz:.1f}us @100MHz), "
@@ -128,12 +148,14 @@ def main():
                                   compact=args.compact)
         cq = flip.compile(g, args.algo, plan, mapping=mapping)
         t0 = time.time()
-        res = cq.query(args.src)
+        res = cq.query(args.src, trace=bool(args.trace))
         attrs = res.attrs
         where = ("local device mesh" if plan.distributed
                  else f"{time.time() - t0:.2f}s wall")
         print(f"[graph] {args.engine}/{args.mode}: fixpoint in "
               f"{res.steps} relaxation steps ({where})")
+        if args.trace:
+            _write_trace(args.trace, res, args.algo)
 
         if args.updates:
             g, attrs = _replay_updates(args, g, cq, res)
@@ -141,6 +163,18 @@ def main():
     ref, _ = reference.run(args.algo, g, args.src)
     print(f"[graph] correct vs reference: "
           f"{PROGRAMS[args.algo].results_match(attrs, ref)}")
+
+
+def _write_trace(path, res, algo):
+    """Write a traced QueryResult as Chrome-trace JSON and print the
+    telemetry summary line."""
+    from repro.obs import write_chrome_trace
+    write_chrome_trace(path, res, name=f"query:{algo}")
+    s = res.telemetry.summary()
+    print(f"[graph] trace: {s['traced_steps']} step spans over "
+          f"{s['dispatches']} dispatch(es), mean active-tile fraction "
+          f"{s['mean_active_tile_fraction']:.3f}, compile "
+          f"{res.compile_s:.2f}s -> {path}")
 
 
 def _load_update_batches(path):
@@ -205,10 +239,12 @@ def _run_batched(args, g, mapping, srcs) -> bool:
     else:
         plan = flip.plan_from_cli(args.engine, args.mode,
                                   compact=args.compact)
-        res = flip.compile(g, args.algo, plan,
-                           mapping=mapping).query(np.asarray(srcs))
+        res = flip.compile(g, args.algo, plan, mapping=mapping).query(
+            np.asarray(srcs), trace=bool(args.trace))
         outs, steps = res.attrs, res.steps
         how = f"one {args.engine} batch of B={len(srcs)}"
+        if args.trace:
+            _write_trace(args.trace, res, args.algo)
     print(f"[graph] {args.engine}/{args.mode}: {len(srcs)} queries via "
           f"{how}, per-query steps {list(map(int, steps))} "
           f"({time.time() - t0:.2f}s wall)")

@@ -36,6 +36,7 @@ from __future__ import annotations
 
 import argparse
 import dataclasses
+import json
 import time
 
 import numpy as np
@@ -45,6 +46,7 @@ from repro.algebra import ALGEBRAS, get_algebra
 from repro.api import CompiledQuery, ExecutionPlan
 from repro.graphs import make_dataset, reference
 from repro.graphs.csr import Graph
+from repro.obs import MetricsRegistry
 
 
 @dataclasses.dataclass
@@ -54,6 +56,9 @@ class GraphRequest:
     src: int
     result: np.ndarray | None = None
     steps: int | None = None
+    t_submit: float = 0.0        # perf_counter at enqueue
+    queue_wait_s: float = 0.0    # enqueue -> dispatch start
+    service_s: float = 0.0       # dispatch wall minus compile share
 
     @property
     def done(self) -> bool:
@@ -99,6 +104,9 @@ class GraphServer:
         self.dispatches = 0
         self.completed = 0
         self.updates_applied = 0
+        # per-server metrics: session-cache hit/miss, per-algo latency /
+        # queue-wait / service / steps histograms, update+rebuild timings
+        self.metrics = MetricsRegistry()
 
     # ------------------------------------------------------------ #
     def session(self, algo: str) -> CompiledQuery:
@@ -108,15 +116,21 @@ class GraphServer:
         key = (algo, self.graph.fingerprint(), self.plan.key())
         cq = self._sessions.get(key)
         if cq is None:
+            self.metrics.counter("sessions.miss").inc()
             get_algebra(algo)        # fail fast on unknown algorithms
             # supersede this algebra's sessions for older graph
             # versions (wholesale swaps would otherwise leak one
             # BlockedGraph per version for the server's lifetime)
             for k in [k for k in self._sessions if k[0] == algo]:
                 del self._sessions[k]
+            t0 = time.perf_counter()
             cq = flip.compile(self.graph, algo, self.plan,
                               mapping=self.mapping)
+            self.metrics.histogram("session_build_s").observe(
+                time.perf_counter() - t0)
             self._sessions[key] = cq
+        else:
+            self.metrics.counter("sessions.hit").inc()
         return cq
 
     def engine(self, algo: str):
@@ -147,6 +161,7 @@ class GraphServer:
         (previously empty tile pair activated) retraces on its next
         dispatch. Returns the per-algebra `UpdateDelta`s."""
         self.drain()
+        t0 = time.perf_counter()
         updates = list(updates)    # consumed once per cached session
         g2 = self.graph.apply_updates(updates)
         old_fp, pk = self.graph.fingerprint(), self.plan.key()
@@ -155,18 +170,24 @@ class GraphServer:
             if fp != old_fp or k != pk:
                 del self._sessions[(algo, fp, k)]   # prune stale versions
                 continue
+            tr = time.perf_counter()
             cq2, deltas[algo] = cq.update(updates, new_graph=g2)
+            self.metrics.histogram("rebuild_s").observe(
+                time.perf_counter() - tr)
             del self._sessions[(algo, fp, k)]
             self._sessions[(algo, g2.fingerprint(), k)] = cq2
         self.graph = g2
         self.updates_applied += 1
+        self.metrics.histogram("update_s").observe(time.perf_counter() - t0)
+        self.metrics.counter("updates.applied").inc()
         return deltas
 
     # ------------------------------------------------------------ #
     def submit(self, algo: str, src: int) -> GraphRequest:
         """Enqueue one query; a full bucket dispatches immediately."""
         get_algebra(algo)            # reject unknown algorithms at submit
-        req = GraphRequest(self._next_id, algo, int(src))
+        req = GraphRequest(self._next_id, algo, int(src),
+                           t_submit=time.perf_counter())
         self._next_id += 1
         bucket = self._buckets.setdefault(algo, [])
         bucket.append(req)
@@ -198,16 +219,57 @@ class GraphServer:
     # ------------------------------------------------------------ #
     def _dispatch(self, algo: str) -> None:
         reqs, self._buckets[algo] = self._buckets[algo], []
+        t_start = time.perf_counter()
         # the session's plan.batch pads the tail bucket to the fixed
         # batch size (repeat of the last source): same (B, ntiles, T)
         # shapes -> jit cache hit, padded rows dropped
         res = self.session(algo).query(
             np.asarray([r.src for r in reqs]))
+        t_done = time.perf_counter()
+        # queue-wait vs service split: waiting is per request (enqueue ->
+        # dispatch start); service is the dispatch wall shared by the
+        # bucket, with the first-dispatch compile share carved out so the
+        # latency histograms describe steady-state serving
+        service = (t_done - t_start) - res.compile_s
+        m = self.metrics
         for b, req in enumerate(reqs):
             req.result = res.attrs[b]
             req.steps = int(res.steps[b])
+            req.queue_wait_s = t_start - req.t_submit
+            req.service_s = service
+            m.histogram(f"latency_s.{algo}").observe(
+                req.queue_wait_s + service)
+            m.histogram(f"queue_wait_s.{algo}").observe(req.queue_wait_s)
+            m.histogram(f"service_s.{algo}").observe(service)
+            m.histogram(f"steps.{algo}").observe(req.steps)
+        if res.compile_s:
+            m.histogram("compile_s").observe(res.compile_s)
+        m.counter(f"dispatches.{algo}").inc(res.dispatches)
+        m.counter("requests.completed").inc(len(reqs))
         self.dispatches += res.dispatches
         self.completed += len(reqs)
+
+    # ------------------------------------------------------------ #
+    def stats(self) -> dict:
+        """JSON-ready server statistics: queue state, session-cache
+        hit/miss, lifetime counters, and the full metrics snapshot
+        (per-algo latency / queue-wait / service / steps histograms,
+        update and rebuild timings, compile-time histogram)."""
+        snap = self.metrics.snapshot()
+        queue = {algo: len(b) for algo, b in self._buckets.items() if b}
+        return {
+            "queue_depth": int(sum(queue.values())),
+            "queue_depth_per_algo": queue,
+            "sessions_cached": len(self._sessions),
+            "session_cache": {
+                "hits": snap["counters"].get("sessions.hit", 0),
+                "misses": snap["counters"].get("sessions.miss", 0),
+            },
+            "completed": self.completed,
+            "dispatches": self.dispatches,
+            "updates_applied": self.updates_applied,
+            "metrics": snap,
+        }
 
 
 # ----------------------------------------------------------------- #
@@ -247,6 +309,10 @@ def main():
     ap.add_argument("--seed", type=int, default=0)
     ap.add_argument("--check", action="store_true",
                     help="verify every response against the numpy oracle")
+    ap.add_argument("--stats", action="store_true",
+                    help="print the server stats() JSON (queue depth, "
+                         "session-cache hit/miss, per-algo latency "
+                         "histograms, update timings) after the stream")
     args = ap.parse_args()
 
     algos = [a.strip() for a in args.algos.split(",") if a.strip()]
@@ -287,6 +353,8 @@ def main():
           f"({len(reqs) / wall:.1f} req/s) over {srv.dispatches} "
           f"dispatches of B={args.batch}, {srv.updates_applied} update "
           f"batches applied")
+    if args.stats:
+        print(json.dumps(srv.stats(), indent=2, sort_keys=True))
     if args.check:
         bad = 0
         for r, g_snap in zip(reqs, snapshots):

@@ -25,6 +25,7 @@ BASELINES = {
     "src/repro/core/": 85.0,
     "src/repro/graphs/": 90.0,
     "src/repro/kernels/frontier/": 85.0,
+    "src/repro/obs/": 85.0,
 }
 
 
