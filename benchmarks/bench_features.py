@@ -1,0 +1,106 @@
+"""Feature-width sweep: the vector-state amortization win.
+
+Measures one jnp-path relaxation step on a power-law graph at feature
+widths d in {1, 8, 32, 128} for two contraction regimes:
+
+  * ``plus_times`` -- the (+, x) semiring contracts each (T, T) weight
+    block against a (T, d) feature slab as one MXU matmul, so the
+    marginal cost of a lane is tiny: one d=32 step should be far
+    cheaper than 32 sequential d=1 steps over the same weight stream;
+  * ``min_plus``   -- the tropical ⊕-reduce runs on the VPU (slab-swept
+    broadcast min), so its per-lane scaling bounds what the idempotent
+    algebras (multi-landmark BFS) gain from the shared weight stream.
+
+Each row records us/call plus effective GFLOP/s (2 * nb * T^2 * d
+flop-equivalents per step -- one multiply + one accumulate per block
+entry per lane, the standard SpMM accounting).
+
+Used three ways:
+  * `benchmarks/bench_kernels.py` calls `run()` so the rows land in the
+    recorded BENCH_kernels.json perf trajectory;
+  * `python -m benchmarks.bench_features` writes its own
+    BENCH_features.json;
+  * CI runs it with ``--min-speedup`` as a regression guard: the job
+    fails unless one d=32 plus_times step beats 32 sequential d=1 steps
+    by the required factor.
+"""
+from __future__ import annotations
+
+import argparse
+import os
+
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks.common import emit, timed, write_json
+from repro.graphs import make_power_law
+from repro.kernels.frontier import build_blocks, frontier_relax
+
+DIMS = (1, 8, 32, 128)
+ALGOS = (("plus_times", "pagerank"), ("min_plus", "sssp"))
+
+
+def _sweep(fast: bool, seed: int = 0):
+    """{(semiring, d): us_per_call} for one dense jnp relax step."""
+    n, tile = (2048, 64) if fast else (4096, 128)
+    g = make_power_law(n, 3 * n, seed=seed)
+    rng = np.random.default_rng(seed)
+    repeats = 5 if fast else 20
+    times, nblocks = {}, {}
+    for sr_name, algo in ALGOS:
+        bg = build_blocks(g, algo, tile=tile)
+        nblocks[sr_name] = int(bg.blocks.shape[0])
+        for d in DIMS:
+            shape = (bg.ntiles, bg.tile) + ((d,) if d > 1 else ())
+            sv = jnp.asarray(rng.uniform(0.5, 9, shape)
+                             .astype(np.float32))
+            carry = jnp.asarray(rng.uniform(0.5, 9, shape)
+                                .astype(np.float32))
+            f = lambda: frontier_relax(sv, carry, bg, mode="jnp",
+                                       compact=False,
+                                       feature_dim=d).block_until_ready()
+            f()                                  # warm the executable
+            _, us = timed(f, repeats=repeats)
+            times[(sr_name, d)] = us
+    return times, nblocks, g, tile
+
+
+def run(fast: bool | None = None) -> float:
+    """Emit the d-sweep rows; returns the plus_times amortization win
+    (32 sequential d=1 steps / one d=32 step)."""
+    fast = bool(os.environ.get("BENCH_FAST")) if fast is None else fast
+    size = "2k" if fast else "4k"
+    times, nblocks, g, tile = _sweep(fast)
+    for (sr_name, d), us in sorted(times.items()):
+        flops = 2.0 * nblocks[sr_name] * tile * tile * d
+        gflops = flops / (us * 1e-6) / 1e9
+        emit(f"feature_step_{sr_name}_{size}_d{d}", us,
+             f"power-law |V|={g.n} blocks={nblocks[sr_name]} d={d} "
+             f"eff_gflops={gflops:.2f}")
+    speedup = 32 * times[("plus_times", 1)] / times[("plus_times", 32)]
+    emit(f"feature_amortization_{size}_plus_times_d32", speedup,
+         "32 sequential d=1 steps / one d=32 step, same weight stream "
+         "(x, higher is better)")
+    trop = 32 * times[("min_plus", 1)] / times[("min_plus", 32)]
+    emit(f"feature_amortization_{size}_min_plus_d32", trop,
+         "32 sequential d=1 steps / one d=32 step, VPU ⊕-reduce "
+         "(x, higher is better)")
+    return speedup
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--min-speedup", type=float, default=0.0,
+                    help="fail (exit 1) unless one d=32 plus_times step "
+                         "beats 32 sequential d=1 steps by this factor")
+    args = ap.parse_args()
+    speedup = run()
+    write_json("features")
+    if args.min_speedup and speedup < args.min_speedup:
+        raise SystemExit(
+            f"vector-state regression: d=32 plus_times amortization "
+            f"{speedup:.2f}x < required {args.min_speedup:.2f}x")
+
+
+if __name__ == "__main__":
+    main()

@@ -3,7 +3,8 @@ correctness cost; on TPU these dispatch to the Pallas kernels).
 
 Emits the per-algebra frontier-relax rows future PRs track, a batched
 (B, ntiles, T) relax row, the dense-vs-compacted frontier-density sweep
-(`bench_frontier_density`), and the end-to-end multi-query batching win:
+(`bench_frontier_density`), the feature-width d-sweep
+(`bench_features`), and the end-to-end multi-query batching win:
 B=32 BFS sources on an LRN road network through one batched
 `CompiledQuery.query` fixpoint vs 32 sequential scalar queries on the
 same compiled session. Results append to
@@ -18,7 +19,8 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from benchmarks import bench_frontier_density, bench_incremental
+from benchmarks import (bench_features, bench_frontier_density,
+                        bench_incremental)
 from benchmarks.common import RESULTS, emit, timed, write_json
 from repro import api as flip
 from repro.algebra import ALGEBRAS
@@ -41,6 +43,8 @@ def run():
     rng = np.random.default_rng(0)
     bgs = {}
     for algo in sorted(ALGEBRAS):
+        if ALGEBRAS[algo].feature_dim != 1:
+            continue   # vector programs: bench_features owns the d-sweep
         bg = bgs[algo] = build_blocks(g, algo, tile=128)
         alg = bg.algebra
         vals = (alg.initial_attrs(g.n, 0) if alg.kind == "residual"
@@ -66,6 +70,10 @@ def run():
 
     # dense vs frontier-compacted streaming across frontier densities
     bench_frontier_density.run(fast)
+
+    # feature-width (d) sweep: vector-state amortization of the weight
+    # stream (matmul contraction vs sequential scalar steps)
+    bench_features.run(fast)
 
     # incremental-vs-scratch recompute after a streaming update batch
     bench_incremental.run(fast)

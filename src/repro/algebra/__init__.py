@@ -1,7 +1,8 @@
 from repro.algebra.semiring import (MIN_PLUS, MAX_MIN, OR_AND, PLUS_TIMES,
                                     SEMIRINGS, Semiring)
-from repro.algebra.programs import (ALGEBRAS, BFS, PAGERANK, REACH, SSSP,
-                                    WCC, WIDEST, VertexAlgebra, get_algebra,
+from repro.algebra.programs import (ALGEBRAS, BFS, LABELPROP, MULTI_BFS,
+                                    PAGERANK, REACH, SSSP, WCC, WIDEST,
+                                    VertexAlgebra, get_algebra, landmarks,
                                     register_algebra)
 
 __all__ = [
@@ -9,4 +10,5 @@ __all__ = [
     "MIN_PLUS", "MAX_MIN", "OR_AND", "PLUS_TIMES",
     "VertexAlgebra", "ALGEBRAS", "get_algebra", "register_algebra",
     "BFS", "SSSP", "WCC", "WIDEST", "REACH", "PAGERANK",
+    "MULTI_BFS", "LABELPROP", "landmarks",
 ]

@@ -37,6 +37,21 @@ from repro.algebra.semiring import (MAX_MIN, MIN_PLUS, OR_AND, PLUS_TIMES,
                                     Semiring)
 
 
+def landmarks(n: int, src, d: int) -> np.ndarray:
+    """The d landmark vertices feature column f is seeded from.
+
+    Deterministic and shared verbatim by the algebra inits, the numpy
+    oracles and the examples: landmark f is the query source advanced by
+    f strides of ~n/d, so landmarks spread over the vertex id space and
+    landmark 0 is always the source itself. `src` may be a scalar or a
+    (B,) batch; the result gains a matching leading axis.
+    """
+    srcs = np.asarray(src, dtype=np.int64)
+    lm = (srcs[..., None] + np.arange(d, dtype=np.int64)
+          * max(1, n // d)) % n
+    return lm
+
+
 @dataclasses.dataclass(frozen=True, eq=False)
 class VertexAlgebra:
     name: str
@@ -52,15 +67,31 @@ class VertexAlgebra:
     tol: float = 0.0             # residual activity threshold ('residual')
     damping: float = 0.85        # PageRank damping ('degree_damped')
     atol: float = 1e-6           # oracle-comparison tolerance
+    feature_dim: int = 1         # native width of the vertex state: 1 =
+                                 # classic scalar programs; d > 1 = (n, d)
+                                 # feature blocks (multi-landmark / labels)
+    feature_init: str = "broadcast"  # how column f of a (n, d) init is
+                                 # seeded: 'broadcast' repeats the scalar
+                                 # init, 'landmarks' seeds column f at
+                                 # landmark f of `landmarks(n, src, d)`
 
     def __post_init__(self):
         # The asynchronous simulator re-merges in-flight duplicates, which
         # is only sound when ⊕ is idempotent and there is no side
-        # accumulator; sim_ok can opt out of that but never opt in.
-        sound = self.semiring.idempotent and self.kind == "monotone"
+        # accumulator; sim_ok can opt out of that but never opt in. The
+        # packet-level simulator is scalar-state only.
+        sound = (self.semiring.idempotent and self.kind == "monotone"
+                 and self.feature_dim == 1)
         object.__setattr__(
             self, "sim_ok",
             sound if self.sim_ok is None else (self.sim_ok and sound))
+        if self.feature_dim < 1:
+            raise ValueError(
+                f"{self.name}: feature_dim must be >= 1, "
+                f"got {self.feature_dim}")
+        if self.feature_init not in ("broadcast", "landmarks"):
+            raise ValueError(
+                f"{self.name}: unknown feature_init {self.feature_init!r}")
 
     # ------------------------------------------------------------------ #
     # edge materialization (blocks, routing tables)
@@ -99,11 +130,26 @@ class VertexAlgebra:
     # yields the classic (n,) vectors, a sequence yields (B, n) -- one
     # independent query per row, the layout every batched layer threads
     # through as (B, ntiles, T).
+    #
+    # At feature_dim d > 1 (passed explicitly, or the algebra's native
+    # width) the state grows a trailing feature axis -- (n, d) / (B, n, d)
+    # -- seeded per `feature_init`; the frontier stays per-vertex.
     # ------------------------------------------------------------------ #
-    def initial_attrs(self, n: int, src) -> np.ndarray:
+    def initial_attrs(self, n: int, src, feature_dim: int | None = None
+                      ) -> np.ndarray:
         sr = self.semiring
+        d = self.feature_dim if feature_dim is None else feature_dim
         srcs = np.atleast_1d(np.asarray(src, dtype=np.int64))
         b = srcs.shape[0]
+        if d > 1 and self.feature_init == "landmarks":
+            lm = landmarks(n, srcs, d)                       # (b, d)
+            seed = ((1.0 - self.damping) if self.kind == "residual"
+                    else sr.one)
+            base = 0.0 if self.kind == "residual" else sr.zero
+            a = np.full((b, n, d), base, dtype=np.float32)
+            a[np.arange(b)[:, None], lm, np.arange(d)[None, :]] = \
+                np.float32(seed)
+            return a if np.ndim(src) else a[0]
         if self.kind == "residual":
             # un-pushed residual of the series p = sum_k M^k b
             a = np.full((b, n), (1.0 - self.damping) / n, dtype=np.float32)
@@ -113,12 +159,20 @@ class VertexAlgebra:
         else:
             a = np.full((b, n), sr.zero, dtype=np.float32)
             a[np.arange(b), srcs] = np.float32(sr.one)
+        if d > 1:                    # 'broadcast': d identical columns
+            a = np.repeat(a[..., None], d, axis=-1)
         return a if np.ndim(src) else a[0]
 
-    def initial_frontier(self, n: int, src) -> np.ndarray:
+    def initial_frontier(self, n: int, src, feature_dim: int | None = None
+                         ) -> np.ndarray:
+        d = self.feature_dim if feature_dim is None else feature_dim
         srcs = np.atleast_1d(np.asarray(src, dtype=np.int64))
         b = srcs.shape[0]
-        if self.all_start or self.kind == "residual":
+        if d > 1 and self.feature_init == "landmarks":
+            # active exactly at the seeded landmarks (per-vertex frontier)
+            f = np.zeros((b, n), dtype=bool)
+            f[np.arange(b)[:, None], landmarks(n, srcs, d)] = True
+        elif self.all_start or self.kind == "residual":
             f = np.ones((b, n), dtype=bool)
         else:
             f = np.zeros((b, n), dtype=bool)
@@ -155,12 +209,18 @@ class VertexAlgebra:
     # leading query axes unchanged: the engine passes (ntiles, T) for one
     # query and (B, ntiles, T) for a batch, and each row of the batch
     # behaves exactly like an independent single-query run.
+    #
+    # With `features=True` the state carries a trailing feature axis
+    # ((..., T, d)) while the frontier stays per-vertex ((..., T)): the
+    # frontier broadcasts over the lanes on scatter, and per-lane
+    # activity any-reduces back to the vertex on post-step.
     # ------------------------------------------------------------------ #
     def improved_jnp(self, new, old):
         return jnp.logical_and(self.semiring.add_jnp(new, old) == new,
                                new != old)
 
-    def scatter_carry_jnp(self, attrs, frontier, op_mode: bool):
+    def scatter_carry_jnp(self, attrs, frontier, op_mode: bool,
+                          features: bool = False):
         """(src_vals, carry) for one relax step.
 
         The kernel computes  new = carry ⊕ (⊕_u src_vals[u] ⊗ W[u, ·]);
@@ -169,19 +229,25 @@ class VertexAlgebra:
         residual -- active lanes push theirs out, so they carry zero.
         """
         sr = self.semiring
+        f = frontier[..., None] if features else frontier
         if self.kind == "residual":
             if op_mode:
                 return attrs, jnp.zeros_like(attrs)
-            sv = jnp.where(frontier, attrs, sr.zero)
-            return sv, jnp.where(frontier, sr.zero, attrs)
-        sv = attrs if op_mode else jnp.where(frontier, attrs, sr.zero)
+            sv = jnp.where(f, attrs, sr.zero)
+            return sv, jnp.where(f, sr.zero, attrs)
+        sv = attrs if op_mode else jnp.where(f, attrs, sr.zero)
         return sv, attrs
 
-    def post_step_jnp(self, attrs, aux, src_vals, new_attrs):
+    def post_step_jnp(self, attrs, aux, src_vals, new_attrs,
+                      features: bool = False):
         """(attrs', aux', frontier') after a relax step."""
         if self.kind == "residual":
-            return new_attrs, aux + src_vals, new_attrs > self.tol
-        return new_attrs, aux, self.improved_jnp(new_attrs, attrs)
+            act = new_attrs > self.tol
+            return (new_attrs, aux + src_vals,
+                    jnp.any(act, axis=-1) if features else act)
+        imp = self.improved_jnp(new_attrs, attrs)
+        return (new_attrs, aux,
+                jnp.any(imp, axis=-1) if features else imp)
 
     def finalize(self, attrs, aux):
         """Result vector reported to the caller."""
@@ -199,7 +265,16 @@ class VertexAlgebra:
                        -1e30, 1e30)
 
     def results_match(self, got, ref) -> bool:
-        """Oracle comparison at this algebra's tolerance."""
+        """Oracle comparison at this algebra's tolerance.
+
+        A scalar program run at feature_dim d > 1 ('broadcast' init)
+        yields d identical columns; comparing such a `(n, d)` result
+        against the scalar `(n,)` oracle broadcasts the oracle over the
+        feature axis.
+        """
+        got, ref = np.asarray(got), np.asarray(ref)
+        if got.ndim == ref.ndim + 1:
+            ref = ref[..., None]
         return bool(np.allclose(self.finite(got), self.finite(ref),
                                 atol=self.atol))
 
@@ -222,9 +297,24 @@ PAGERANK = VertexAlgebra("pagerank", PLUS_TIMES, kind="residual",
                          weight_rule="degree_damped", all_start=True,
                          exe_update=6, exe_noupdate=3,
                          tol=1e-9, damping=0.85, atol=1e-4)
+# Vector-state programs (feature_dim > 1): column f runs from landmark f
+# of `landmarks(n, src, d)`. multi_bfs embeds every vertex by its hop
+# distance to d landmarks (one min_plus relaxation amortizing each weight
+# block over d lanes); labelprop diffuses d seeded label masses through
+# the damped-walk (+, x) operator -- argmax over the feature axis is the
+# propagated community label (seeded label spreading).
+MULTI_BFS = VertexAlgebra("multi_bfs", MIN_PLUS, weight_rule="hop",
+                          exe_update=5, exe_noupdate=4,
+                          feature_dim=8, feature_init="landmarks")
+LABELPROP = VertexAlgebra("labelprop", PLUS_TIMES, kind="residual",
+                          weight_rule="degree_damped",
+                          exe_update=6, exe_noupdate=3,
+                          tol=1e-9, damping=0.85, atol=1e-4,
+                          feature_dim=8, feature_init="landmarks")
 
 ALGEBRAS: dict[str, VertexAlgebra] = {
-    a.name: a for a in (BFS, SSSP, WCC, WIDEST, REACH, PAGERANK)
+    a.name: a for a in (BFS, SSSP, WCC, WIDEST, REACH, PAGERANK,
+                        MULTI_BFS, LABELPROP)
 }
 
 

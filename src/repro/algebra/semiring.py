@@ -24,6 +24,15 @@ cycle simulator and the host-side oracles, the jnp side is traced into
 the Pallas kernel / jnp fallback / shard_map engine. Instances are
 module-level singletons so they hash by identity and are safe static
 arguments to `jax.jit`.
+
+Vector-valued vertex state generalizes the step above to `(n, d)`
+feature blocks: `cand[v, f] = ⊕_u (src_vals[u, f] ⊗ W[u, v])`, i.e. the
+same contraction applied independently per feature lane `f`. Per tile
+that is a `(T, T) × (T, d)` contraction, exposed as `contract_jnp`:
+for (+, ×) it IS a matmul (`W.T @ sv`, an MXU op on TPU); for every
+other ⊕/⊗ pair it is a broadcast-⊗ then ⊕-reduce over the source axis,
+swept in static d-slabs so the `(S, D, slab)` intermediate stays small
+inside a Pallas kernel body.
 """
 from __future__ import annotations
 
@@ -56,6 +65,9 @@ class Semiring:
     add_reduce_jnp: Callable    # ⊕-reduction along an axis, jnp
     segment_reduce_jnp: Callable  # ⊕-reduction by segment id, jnp
     idempotent: bool            # x ⊕ x == x (min/max/or, not +)
+    contract_jnp: Callable = None  # (..., S, d) ⊗ (..., S, D) -> (..., D, d)
+                                #   tile contraction over the source axis;
+                                #   derived from add/mul when not given
 
     def monotone_under(self, old_vals, new_vals) -> bool:
         """Warm-start soundness hook for streaming graph updates.
@@ -78,6 +90,41 @@ class Semiring:
         old = np.asarray(old_vals, dtype=np.float32)
         new = np.asarray(new_vals, dtype=np.float32)
         return bool(np.all(self.add_np(new, old) == new))
+
+    def __post_init__(self):
+        if self.contract_jnp is None:
+            object.__setattr__(
+                self, "contract_jnp",
+                _generic_contract(self.add_reduce_jnp, self.mul_jnp))
+
+
+def _generic_contract(add_reduce, mul, slab: int = 8):
+    """Generic (⊕, ⊗) tile contraction, swept in static d-slabs.
+
+    ``sv`` is ``(..., S, d)`` source state, ``w`` is ``(..., S, D)``
+    weights; the result is ``(..., D, d)``:
+    ``out[.., v, f] = ⊕_u sv[.., u, f] ⊗ w[.., u, v]``. The broadcast
+    intermediate is ``(..., S, D, slab)`` -- bounded by the static slab
+    width so the Pallas kernel body's VMEM working set stays small even
+    at d=128 (see kernels/frontier/frontier.py's budget math).
+    """
+    def contract(sv, w):
+        d = sv.shape[-1]
+        outs = [
+            add_reduce(mul(sv[..., :, None, k:k + slab],
+                           w[..., :, :, None]), axis=-3)
+            for k in range(0, d, slab)
+        ]
+        return outs[0] if len(outs) == 1 else jnp.concatenate(outs, -1)
+    return contract
+
+
+def _matmul_contract(sv, w):
+    """(+, ×) tile contraction as a true matmul: ``w.T @ sv`` contracts
+    the source axis on the MXU ((T, T) × (T, d) per tile)."""
+    return jnp.matmul(jnp.swapaxes(w, -1, -2), sv,
+                      preferred_element_type=jnp.float32)
+
 
 def _segment_or(x, seg, num_segments):
     return jax.ops.segment_max(x, seg, num_segments=num_segments)
@@ -122,6 +169,7 @@ PLUS_TIMES = Semiring(
     segment_reduce_jnp=lambda x, s, n: jax.ops.segment_sum(
         x, s, num_segments=n),
     idempotent=False,
+    contract_jnp=_matmul_contract,
 )
 
 SEMIRINGS = {s.name: s for s in (MIN_PLUS, MAX_MIN, OR_AND, PLUS_TIMES)}

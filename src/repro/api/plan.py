@@ -56,6 +56,13 @@ class ExecutionPlan:
                    (monotone algebra + monotone update delta) and falls
                    back to scratch otherwise; 'always' errors instead of
                    falling back; 'never' forbids warm starts.
+    feature_dim -- feature width d of the vertex state: 0 ('auto')
+                   adopts the program's native width (1 for the scalar
+                   programs, d for vector programs like multi_bfs);
+                   d > 1 on a scalar program runs it over d broadcast
+                   feature lanes ((n, d) results). A vector program can
+                   only run at its native width -- `resolve()` rejects
+                   mismatches.
     max_steps   -- fixpoint safety valve.
     """
 
@@ -68,6 +75,7 @@ class ExecutionPlan:
     mesh: object = None          # jax.sharding.Mesh | None
     mesh_axis: str = "data"
     warm: str = "auto"
+    feature_dim: int = 0         # 0 = auto (the program's native width)
     max_steps: int = 100_000
 
     # -------------------------------------------------------------- #
@@ -108,6 +116,17 @@ class ExecutionPlan:
             raise ValueError(
                 f"plan.warm must be one of {WARM_POLICIES}, got "
                 f"{self.warm!r}")
+        if not isinstance(self.feature_dim, int) or self.feature_dim < 0:
+            raise ValueError(
+                f"plan.feature_dim must be an int >= 0 (0 = the "
+                f"program's native width), got {self.feature_dim!r}")
+        if algebra is not None and algebra.feature_dim > 1 \
+                and self.feature_dim not in (0, algebra.feature_dim):
+            raise ValueError(
+                f"plan.feature_dim={self.feature_dim} conflicts with "
+                f"{algebra.name}'s native feature_dim "
+                f"{algebra.feature_dim}; vector programs only run at "
+                "their native width (use feature_dim=0 to adopt it)")
         if self.max_steps < 1:
             raise ValueError(
                 f"plan.max_steps must be >= 1, got {self.max_steps}")
@@ -135,8 +154,11 @@ class ExecutionPlan:
                 "use 'interpret' (exact, slow) or 'jnp'")
         compact = (self.mode == "data" if self.compact == "auto"
                    else bool(self.compact))
+        d = self.feature_dim
+        if d == 0:
+            d = algebra.feature_dim if algebra is not None else 1
         plan = dataclasses.replace(
-            self, relax_mode=relax, compact=compact,
+            self, relax_mode=relax, compact=compact, feature_dim=d,
             distributed=bool(self.distributed or self.mesh is not None))
         plan.validate(algebra)
         return plan
@@ -148,7 +170,8 @@ class ExecutionPlan:
         return (self.mode, self.relax_mode, self.compact, self.tile,
                 self.batch, self.distributed,
                 None if self.mesh is None else id(self.mesh),
-                self.mesh_axis, self.warm, self.max_steps)
+                self.mesh_axis, self.warm, self.feature_dim,
+                self.max_steps)
 
 
 # ------------------------------------------------------------------ #
@@ -168,7 +191,8 @@ def resolve_cli_engine(engine: str, mode: str) -> tuple[str, str]:
 
 
 def plan_from_cli(engine: str, mode: str, compact: bool | str = "auto",
-                  tile: int = 128, batch: int = 0) -> ExecutionPlan:
+                  tile: int = 128, batch: int = 0,
+                  feature_dim: int = 0) -> ExecutionPlan:
     """One ExecutionPlan from the graph_run-style CLI surface: folds the
     deprecated ``--engine op`` alias, maps ``--engine dist`` to a
     distributed plan, and threads the remaining knobs through unchanged
@@ -180,4 +204,5 @@ def plan_from_cli(engine: str, mode: str, compact: bool | str = "auto",
             f"engine {engine!r} has no ExecutionPlan (expected 'jax' or "
             "'dist'; 'sim' runs the cycle simulator, not the engine)")
     return ExecutionPlan(mode=mode, compact=compact, tile=tile,
-                         batch=batch, distributed=(engine == "dist"))
+                         batch=batch, distributed=(engine == "dist"),
+                         feature_dim=feature_dim)

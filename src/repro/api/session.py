@@ -126,8 +126,10 @@ class CompiledQuery:
         if batched and len(np.atleast_1d(srcs)) == 0:
             # degenerate empty batch: well-formed empty shapes (the
             # tiled engine state cannot represent B=0)
+            d = self.plan.feature_dim
+            shape = (0, self.graph.n, d) if d > 1 else (0, self.graph.n)
             return QueryResult(
-                attrs=np.zeros((0, self.graph.n), dtype=np.float32),
+                attrs=np.zeros(shape, dtype=np.float32),
                 steps=np.zeros(0, dtype=np.int32),
                 srcs=np.zeros(0, dtype=np.int64), plan=self.plan,
                 program=self.program, graph=self.graph,
@@ -209,12 +211,14 @@ class CompiledQuery:
         return (np.concatenate(outs), np.concatenate(steps), dispatches,
                 teles, compile_s)
 
-    @staticmethod
-    def _slice_warm(ws, i, k, nb):
-        """Per-bucket view of a warm start: (n,) warm attrs broadcast to
-        every bucket; (B, n) warm attrs follow their queries (padded by
-        repeating the chunk's last row, mirroring the source padding)."""
-        if ws is None or np.ndim(ws.attrs) == 1:
+    def _slice_warm(self, ws, i, k, nb):
+        """Per-bucket view of a warm start: batch-shared warm attrs
+        ((n,), or (n, d) at feature_dim d > 1) broadcast to every
+        bucket; per-query warm attrs ((B, n) / (B, n, d)) follow their
+        queries (padded by repeating the chunk's last row, mirroring the
+        source padding)."""
+        shared_ndim = 2 if self.plan.feature_dim > 1 else 1
+        if ws is None or np.ndim(ws.attrs) == shared_ndim:
             return ws
         rows = ws.attrs[i:i + k]
         rows = np.concatenate(
@@ -253,9 +257,10 @@ class CompiledQuery:
                     "session.update(...)); pass an explicit WarmStart "
                     "to resume from arbitrary state")
             attrs = np.asarray(warm.attrs)
-            if wsrc.size == 1 and attrs.ndim == 2 \
+            batched_ndim = 3 if self.plan.feature_dim > 1 else 2
+            if wsrc.size == 1 and attrs.ndim == batched_ndim \
                     and qs.shape != wsrc.shape:
-                # single-source fan-out: a (1, n) batched result
+                # single-source fan-out: a (1, n[, d]) batched result
                 # broadcasts over the batch exactly like a scalar one
                 attrs = attrs[0]
             if warm.graph.fingerprint() != self.prev_fp:
@@ -325,7 +330,8 @@ def compile(graph: Graph, program, plan: ExecutionPlan | None = None, *,
     engine = FlipEngine.build(graph, prog.algebra, mapping=mapping,
                               tile=rplan.tile, mode=rplan.mode,
                               relax_mode=rplan.relax_mode,
-                              compact=rplan.compact)
+                              compact=rplan.compact,
+                              feature_dim=rplan.feature_dim)
     engine = dataclasses.replace(engine, max_steps=rplan.max_steps)
     return CompiledQuery(graph=graph, program=prog, plan=rplan,
                          engine=engine)

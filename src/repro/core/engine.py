@@ -115,6 +115,9 @@ class FlipEngine:
     compact: bool | str = "auto"  # frontier-compacted block streaming:
                                   # 'auto' = on for data mode, off for op
     max_steps: int = 100_000
+    feature_dim: int = 1        # feature width d of the vertex state:
+                                # d > 1 runs the (T, T) x (T, d) vector
+                                # relax ((B, ntiles, T, d) state)
 
     # -------------------------------------------------------------- #
     @staticmethod
@@ -122,15 +125,27 @@ class FlipEngine:
               mapping: Mapping | None = None,
               tile: int = 128, mode: str = "data",
               relax_mode: str = "auto",
-              compact: bool | str = "auto") -> "FlipEngine":
+              compact: bool | str = "auto",
+              feature_dim: int | None = None) -> "FlipEngine":
         order = mapping_order(mapping) if mapping is not None else None
         bg = build_blocks(graph, algo=algo, tile=tile, order=order)
+        d = bg.algebra.feature_dim if feature_dim is None else feature_dim
+        if bg.algebra.feature_dim > 1 and d != bg.algebra.feature_dim:
+            raise ValueError(
+                f"{bg.algebra.name} natively carries feature_dim "
+                f"{bg.algebra.feature_dim}; cannot run it at "
+                f"feature_dim {d}")
         return FlipEngine(bg=bg, algo=bg.algebra.name, mode=mode,
-                          relax_mode=relax_mode, compact=compact)
+                          relax_mode=relax_mode, compact=compact,
+                          feature_dim=d)
 
     @property
     def algebra(self) -> VertexAlgebra:
         return self.bg.algebra
+
+    @property
+    def _features(self) -> bool:
+        return self.feature_dim > 1
 
     @property
     def _use_compact(self) -> bool:
@@ -154,6 +169,7 @@ class FlipEngine:
         `warm.attrs` and only `warm.seeds` start active, so relaxation
         propagates exactly the update batch's improvements."""
         bg, alg = self.bg, self.algebra
+        d, features = self.feature_dim, self._features
         srcs = np.atleast_1d(np.asarray(srcs, dtype=np.int64))
         b = srcs.shape[0]
         if warm is not None:
@@ -162,31 +178,46 @@ class FlipEngine:
                     f"warm start needs a monotone algebra; {alg.name} is "
                     f"{alg.kind!r} -- recompute from scratch instead")
             prev = np.asarray(warm.attrs, dtype=np.float32)
-            if prev.ndim == 1:
-                prev = np.broadcast_to(prev, (b, bg.n))
-            if prev.shape != (b, bg.n):
+            want = (b, bg.n, d) if features else (b, bg.n)
+            if features and (prev.ndim < 2 or prev.shape[-1] != d):
+                wd = prev.shape[-1] if prev.ndim >= 2 else 1
+                raise ValueError(
+                    f"warm attrs carry feature_dim {wd} but this "
+                    f"engine runs {alg.name} at feature_dim {d}; "
+                    f"warm state shape {prev.shape} != {want}")
+            if prev.ndim == len(want) - 1:   # shared across the batch
+                prev = np.broadcast_to(prev, want)
+            if prev.shape != want:
                 raise ValueError(
                     f"warm attrs shape {prev.shape} does not match "
-                    f"(B={b}, n={bg.n})")
-            attrs = bg.to_tiled(prev)
+                    f"{want} (B={b}, n={bg.n}"
+                    + (f", d={d})" if features else ")"))
+            attrs = bg.to_tiled(prev, features=features)
             frontier = np.zeros((b, bg.padded_n), dtype=bool)
             seeds = np.asarray(warm.seeds, dtype=np.int64)
             frontier[:, bg.perm[seeds]] = True
         else:
-            attrs = bg.to_tiled(alg.initial_attrs(bg.n, srcs))
+            attrs = bg.to_tiled(
+                alg.initial_attrs(bg.n, srcs, feature_dim=d),
+                features=features)
             frontier = np.zeros((b, bg.padded_n), dtype=bool)
-            frontier[:, bg.perm] = alg.initial_frontier(bg.n, srcs)
-        aux = bg.to_tiled(np.zeros((b, bg.n), dtype=np.float32), fill=0.0)
+            frontier[:, bg.perm] = alg.initial_frontier(bg.n, srcs,
+                                                        feature_dim=d)
+        aux_shape = (b, bg.n, d) if features else (b, bg.n)
+        aux = bg.to_tiled(np.zeros(aux_shape, dtype=np.float32), fill=0.0,
+                          features=features)
         return attrs, aux, jnp.asarray(
             frontier.reshape(b, bg.ntiles, bg.tile))
 
     def _step(self, attrs, aux, frontier, with_stats: bool = False):
-        alg = self.algebra
+        alg, features = self.algebra, self._features
         sv, carry = alg.scatter_carry_jnp(attrs, frontier,
-                                          op_mode=(self.mode == "op"))
+                                          op_mode=(self.mode == "op"),
+                                          features=features)
         new = frontier_relax(sv, carry, self.bg, mode=self.relax_mode,
-                             compact=self._use_compact)
-        out = alg.post_step_jnp(attrs, aux, sv, new)
+                             compact=self._use_compact,
+                             feature_dim=self.feature_dim)
+        out = alg.post_step_jnp(attrs, aux, sv, new, features=features)
         if not with_stats:
             return out
         return out, self._step_stats_jit()(sv, frontier)
@@ -203,7 +234,7 @@ class FlipEngine:
         as i32; `fetched` is the blocks streamed from HBM this step
         (active blocks under compaction, all blocks under dense)."""
         bg = self.bg
-        act = tile_activity(sv, bg.semiring)                # (ntiles,)
+        act = tile_activity(sv, bg.semiring, self._features)  # (ntiles,)
         active_tiles = jnp.sum(act.astype(jnp.int32))
         nb = bg.bsrc.shape[0]
         if self._use_compact:
@@ -234,10 +265,12 @@ class FlipEngine:
         stepped = self._step(attrs, aux, frontier, with_stats=with_stats)
         (attrs_n, aux_n, frontier_n), stats = \
             stepped if with_stats else (stepped, None)
-        m = live[:, None, None]
-        out = (jnp.where(m, attrs_n, attrs),
-               jnp.where(m, aux_n, aux),
-               jnp.logical_and(frontier_n, m))
+        # live broadcasts from the query axis over every trailing state
+        # axis: (B, 1, 1) against (B, ntiles, T), one more 1 at d > 1
+        ms = live.reshape(live.shape + (1,) * (attrs.ndim - 1))
+        out = (jnp.where(ms, attrs_n, attrs),
+               jnp.where(ms, aux_n, aux),
+               jnp.logical_and(frontier_n, live[:, None, None]))
         return (out, stats) if with_stats else out
 
     def _fixpoint(self, attrs0, aux0, frontier0, trace_cap: int = 0):
@@ -455,7 +488,8 @@ class FlipEngine:
         t0 = time.perf_counter()
         attrs, aux, steps, rec = self._fixpoint(attrs0, aux0, frontier0,
                                                 trace_cap)
-        out = self.bg.to_orig(self.algebra.finalize(attrs, aux))
+        out = self.bg.to_orig(self.algebra.finalize(attrs, aux),
+                              features=self._features)
         steps = np.asarray(steps)
         tele = None
         if rec is not None:
@@ -466,7 +500,8 @@ class FlipEngine:
                 n=self.bg.n, ntiles=self.bg.ntiles,
                 n_blocks=int(self.bg.bsrc.shape[0]), steps=steps,
                 trace=trace, wall_s=time.perf_counter() - t0,
-                truncated=truncated)
+                truncated=truncated, tile=self.bg.tile,
+                feature_dim=self.feature_dim)
         return out, steps, tele
 
     # -------------------------------------------------------------- #
@@ -549,12 +584,13 @@ class FlipEngine:
             # padding slot's bsrc points at global tile 0, whose activity
             # must not keep this device awake)
 
+        features = self._features
         attrs0, aux0, frontier0 = self.initial_state(srcs, warm=warm)
         pad = ntiles_p - bg.ntiles
         if pad:
-            attrs0 = jnp.pad(attrs0, ((0, 0), (0, pad), (0, 0)),
-                             constant_values=zero)
-            aux0 = jnp.pad(aux0, ((0, 0), (0, pad), (0, 0)))
+            widths = ((0, 0), (0, pad)) + ((0, 0),) * (attrs0.ndim - 2)
+            attrs0 = jnp.pad(attrs0, widths, constant_values=zero)
+            aux0 = jnp.pad(aux0, widths)
             frontier0 = jnp.pad(frontier0, ((0, 0), (0, pad), (0, 0)))
         op_mode = self.mode == "op"
         skip_idle = self._use_compact
@@ -576,8 +612,11 @@ class FlipEngine:
 
             def relax_local(args):
                 svb, carry_local = args
-                cand = sr.add_reduce_jnp(
-                    sr.mul_jnp(svb[..., :, None], blocks), axis=-2)
+                if features:        # (B, nb, T, d) x (nb, T, T) contraction
+                    cand = sr.contract_jnp(svb, blocks)
+                else:
+                    cand = sr.add_reduce_jnp(
+                        sr.mul_jnp(svb[..., :, None], blocks), axis=-2)
                 best = jax.vmap(lambda c: sr.segment_reduce_jnp(
                     c, bdst_l, tiles_per_dev))(cand)
                 return sr.add_jnp(carry_local, best)
@@ -585,11 +624,14 @@ class FlipEngine:
             def body(state):
                 attrs, aux, frontier, steps = state
                 live = frontier.any(axis=(1, 2))
-                sv, carry = alg.scatter_carry_jnp(attrs, frontier, op_mode)
+                sv, carry = alg.scatter_carry_jnp(attrs, frontier, op_mode,
+                                                  features=features)
                 carry_local = jax.lax.dynamic_slice_in_dim(
                     carry, jax.lax.axis_index(axis) * tiles_per_dev,
                     tiles_per_dev, axis=1)
-                svb = sv[:, bsrc_l]                        # (B, nb, T)
+                svb = sv[:, bsrc_l]                        # (B, nb, T[, d])
+                valid_b = valid_l.reshape(
+                    (1, -1) + (1,) * (svb.ndim - 2))
                 if skip_idle:
                     # per-device frontier compaction, degenerate exact
                     # form: no active source among the local *real*
@@ -599,8 +641,7 @@ class FlipEngine:
                     # their bsrc points at global tile 0, whose activity
                     # must not keep an otherwise idle device awake.
                     new_local = jax.lax.cond(
-                        jnp.any(jnp.logical_and(svb != zero,
-                                                valid_l[None, :, None])),
+                        jnp.any(jnp.logical_and(svb != zero, valid_b)),
                         relax_local, lambda args: args[1],
                         (svb, carry_local))
                 else:
@@ -608,11 +649,11 @@ class FlipEngine:
                 new = jax.lax.all_gather(new_local, axis, axis=1,
                                          tiled=True)
                 attrs_n, aux_n, frontier_n = alg.post_step_jnp(
-                    attrs, aux, sv, new)
-                m = live[:, None, None]
-                return (jnp.where(m, attrs_n, attrs),
-                        jnp.where(m, aux_n, aux),
-                        jnp.logical_and(frontier_n, m),
+                    attrs, aux, sv, new, features=features)
+                ms = live.reshape(live.shape + (1,) * (attrs.ndim - 1))
+                return (jnp.where(ms, attrs_n, attrs),
+                        jnp.where(ms, aux_n, aux),
+                        jnp.logical_and(frontier_n, live[:, None, None]),
                         steps + live.astype(jnp.int32))
 
             steps0 = jnp.zeros(attrs.shape[0], jnp.int32)
@@ -625,7 +666,7 @@ class FlipEngine:
             blocks_sh, jnp.asarray(bsrc_sh), jnp.asarray(bdst_sh),
             jnp.asarray(valid_sh), attrs0, aux0, frontier0)
         out = self.algebra.finalize(attrs_f, aux_f)
-        out = self.bg.to_orig(out[:, :bg.ntiles])
+        out = self.bg.to_orig(out[:, :bg.ntiles], features=features)
         return out, np.asarray(steps)
 
     # -------------------------------------------------------------- #

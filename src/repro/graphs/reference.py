@@ -163,6 +163,62 @@ def reach(g: Graph, src: int):
 
 
 # ---------------------------------------------------------------------- #
+# vector-state oracles: (n, d) feature blocks, column f seeded from
+# landmark f of `landmarks(n, src, d)` (landmark 0 == src). Shared with
+# the algebras through the same landmark convention, so the engine and
+# the oracle agree on seeding by construction.
+# ---------------------------------------------------------------------- #
+def multi_bfs(g: Graph, src: int, d: int = 8):
+    """Multi-landmark BFS embedding: column f is the hop-level vector
+    from landmark f. Returns (levels f32 (n, d), stats)."""
+    from repro.algebra.programs import landmarks
+    lm = landmarks(g.n, src, d)
+    cols, edges = [], 0
+    for f in range(d):
+        lev, st = bfs(g, int(lm[f]))
+        cols.append(lev)
+        edges += st["edges_relaxed"]
+    return np.stack(cols, axis=1), {"edges_relaxed": edges}
+
+
+def labelprop(g: Graph, src: int, d: int = 8, damping: float = 0.85,
+              tol: float = 1e-12, max_iters: int = 10_000):
+    """Seeded label spreading under the damped-walk (+, x) operator:
+    column f is the fixpoint of
+
+        p_f = b_f + damping * sum_{u -> v} p_f[u] / outdeg(u)
+
+    with b_f = (1 - damping) * onehot(landmark f) -- the power series
+    sum_k (damping M)^k b_f the engine's residual push accumulates.
+    argmax over the feature axis is the propagated community label.
+    Returns (masses f32 (n, d), stats)."""
+    from repro.algebra.programs import landmarks
+    n = g.n
+    lm = landmarks(n, src, d)
+    deg = g.out_degree().astype(np.float64)
+    b = np.zeros((n, d), dtype=np.float64)
+    b[lm, np.arange(d)] = 1.0 - damping
+    p = np.zeros((n, d), dtype=np.float64)
+    iters = 0
+    edges_relaxed = 0
+    for iters in range(1, max_iters + 1):
+        contrib = np.where(deg[:, None] > 0,
+                           p / np.maximum(deg, 1)[:, None], 0.0)
+        new = b.copy()
+        for u in range(n):
+            lo, hi = g.indptr[u], g.indptr[u + 1]
+            if contrib[u].any():
+                new[g.indices[lo:hi]] += damping * contrib[u]
+            edges_relaxed += hi - lo
+        delta = np.abs(new - p).max()
+        p = new
+        if delta < tol:
+            break
+    return p.astype(np.float32), {"edges_relaxed": edges_relaxed,
+                                  "iterations": iters}
+
+
+# ---------------------------------------------------------------------- #
 # oracle registry: one entry per registered algorithm, so `run` dispatch
 # and `repro.api.Program` registration share a single table. Every oracle
 # is normalized to the `(graph, src) -> (result, stats)` signature
@@ -175,6 +231,8 @@ ORACLES = {
     "pagerank": lambda g, src=0: pagerank(g),
     "widest": widest,
     "reach": reach,
+    "multi_bfs": multi_bfs,
+    "labelprop": labelprop,
 }
 
 

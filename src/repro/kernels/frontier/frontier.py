@@ -49,12 +49,25 @@ and the single-query accumulation semantics carry over unchanged. The
 packet trigger is per query: block i is skipped for query b exactly when
 that query's source tile holds only ⊕-identity lanes.
 
+Vector-valued vertex state (feature_dim d > 1): the state blocks grow a
+trailing feature axis -- (B, ntiles, T, d) -- and one grid step becomes a
+(T, T) × (T, d) tile contraction via `Semiring.contract_jnp`: a true MXU
+matmul (`W.T @ sv`) for (+, ×), a d-slab-swept broadcast-⊕-reduce on the
+VPU for the tropical/boolean pairs. The weight block stays resident in
+VMEM while the B query visits spin against it, so each streamed block is
+amortized over B·d lanes instead of B -- the same HBM traffic now feeds
+d× the math, which is exactly the memory-bound regime's win.
+
 Layout: tile size T is a multiple of 128 (lane width). VMEM working set
-per step = T*T*4 B (current block) + T*T*4 B (sentinel block, resident
-for the whole step when streaming compacted) + (2B+1)*T*4 B (per-query
-src vals, plus the B-row dst init and out slabs) -- e.g. 161 KiB for
-T=128, B=32, well inside the ~16 MiB VMEM budget; larger T=256/512
-trades fewer grid steps against VMEM (ops.py picks T).
+per step at feature width d (d = 1 is the scalar layout) =
+T*T*4 B (current block) + T*T*4 B (sentinel block, resident for the
+whole step when streaming compacted) + (2B+1)*T*d*4 B (per-query src
+slabs, plus the B-row dst init and out slabs), plus the generic
+contraction's transient T*T*min(d, 8)*4 B broadcast slab (the in-kernel
+d-sweep is bounded at 8 lanes per sweep; the (+, ×) matmul needs no
+intermediate). Examples: 161 KiB for T=128, B=32, d=1; 2.7 MiB for
+T=128, B=32, d=8; d=128 solo (B=1) is 833 KiB -- all inside the ~16 MiB
+VMEM budget. ops.py picks T; plan.resolve validates d.
 """
 from __future__ import annotations
 
@@ -69,11 +82,18 @@ from repro.algebra import MIN_PLUS, Semiring
 
 
 @functools.lru_cache(maxsize=None)
-def _make_relax_kernel(semiring: Semiring):
-    """Specialize the kernel body for one algebra (cached per semiring)."""
+def _make_relax_kernel(semiring: Semiring, feature_dim: int = 1):
+    """Specialize the kernel body for one contraction shape.
+
+    The cache key is the full (semiring, feature_dim) pair -- the d = 1
+    body indexes (1, 1, T) state slabs while d > 1 bodies contract
+    (1, 1, T, d) slabs through `semiring.contract_jnp`, so per-d
+    specializations must not collide on the semiring alone.
+    """
     zero = float(semiring.zero)        # python literal: safe to close over
     add, mul = semiring.add_jnp, semiring.mul_jnp
     add_reduce = semiring.add_reduce_jnp
+    contract = semiring.contract_jnp
 
     def _relax_kernel(bsrc_ref, bdst_ref, bsel_ref, src_vals_ref, carry_ref,
                       block_ref, out_ref):
@@ -90,7 +110,7 @@ def _make_relax_kernel(semiring: Semiring):
         def _init():
             out_ref[...] = carry_ref[...]
 
-        src_vals = src_vals_ref[0]     # (1, T) query b's source tile,
+        src_vals = src_vals_ref[0]     # (1, T[, d]) query b's source tile,
         # FLIP trigger rule, per query:  ⊕-identity where inactive
         # skip the block if none of this query's sources is active.
         # (sentinel slots may still fire -- their all-identity block makes
@@ -99,22 +119,30 @@ def _make_relax_kernel(semiring: Semiring):
         @pl.when(jnp.any(src_vals != zero))
         def _relax():
             w = block_ref[0]           # (T, T): w[s, d]
-            cand = add_reduce(mul(src_vals[0][:, None], w), axis=0)  # (T,)
-            cur = out_ref[pl.ds(b, 1), 0, :]                      # (1, T)
-            out_ref[pl.ds(b, 1), 0, :] = add(cur, cand[None, :])
+            if feature_dim > 1:
+                cand = contract(src_vals[0], w)           # (T, d)
+                cur = out_ref[pl.ds(b, 1), 0, :, :]       # (1, T, d)
+                out_ref[pl.ds(b, 1), 0, :, :] = add(cur, cand[None])
+            else:
+                cand = add_reduce(mul(src_vals[0][:, None], w),
+                                  axis=0)                 # (T,)
+                cur = out_ref[pl.ds(b, 1), 0, :]          # (1, T)
+                out_ref[pl.ds(b, 1), 0, :] = add(cur, cand[None, :])
 
     return _relax_kernel
 
 
-@functools.partial(jax.jit, static_argnames=("semiring", "interpret"))
-def frontier_relax_pallas(src_vals: jnp.ndarray,  # (B?, ntiles, T) f32
-                          carry: jnp.ndarray,     # (B?, ntiles, T) f32
+@functools.partial(jax.jit,
+                   static_argnames=("semiring", "interpret", "feature_dim"))
+def frontier_relax_pallas(src_vals: jnp.ndarray,  # (B?, ntiles, T[, d]) f32
+                          carry: jnp.ndarray,     # (B?, ntiles, T[, d]) f32
                           blocks: jnp.ndarray,    # (nb[+1], T, T) f32
                           bsrc: jnp.ndarray,      # (nslots,) i32, sorted by
                           bdst: jnp.ndarray,      # (nslots,) i32 (bdst, bsrc)
                           semiring: Semiring = MIN_PLUS,
                           interpret: bool = False,
-                          bsel: jnp.ndarray | None = None) -> jnp.ndarray:
+                          bsel: jnp.ndarray | None = None,
+                          feature_dim: int = 1) -> jnp.ndarray:
     """One relaxation step: new[b, d] = carry[b, d] ⊕ (⊕_s sv[b, s] ⊗ W[s, d]).
 
     `src_vals`/`carry` are (ntiles, T) for one query or (B, ntiles, T) for
@@ -123,13 +151,28 @@ def frontier_relax_pallas(src_vals: jnp.ndarray,  # (B?, ntiles, T) f32
     keep their carry (callers ensure every tile has at least one block, or
     accept identity via the input_output_aliasing below).
 
+    `feature_dim` d > 1 switches to vector-valued vertex state: the state
+    arrays carry a trailing feature axis ((ntiles, T, d) solo /
+    (B, ntiles, T, d) batched) and each grid step runs the (T, T) × (T, d)
+    tile contraction instead of the scalar broadcast-reduce. `feature_dim`
+    is an explicit static argument (not inferred from ndim) because
+    (ntiles, T, d) and (B, ntiles, T) are indistinguishable by rank alone.
+
     `bsel` (optional, (nslots,) i32) streams the weight blocks through an
     indirection: grid slot i fetches ``blocks[bsel[i]]``. Dense streaming
     is ``bsel = None`` (identity). Compacted streaming passes the output
     of `ops.compact_block_stream` together with the sentinel-extended
     block array and the compacted `bsrc`/`bdst` slot coordinates.
     """
-    squeeze = src_vals.ndim == 2
+    features = feature_dim > 1
+    if src_vals.shape != carry.shape:
+        raise ValueError(f"src_vals {src_vals.shape} / carry "
+                         f"{carry.shape} state shapes disagree")
+    if features and src_vals.shape[-1] != feature_dim:
+        raise ValueError(
+            f"state carries feature_dim {src_vals.shape[-1]} but the "
+            f"kernel was asked for feature_dim {feature_dim}")
+    squeeze = src_vals.ndim == 2 + features
     if squeeze:
         src_vals, carry = src_vals[None], carry[None]
     t = blocks.shape[-1]
@@ -138,28 +181,45 @@ def frontier_relax_pallas(src_vals: jnp.ndarray,  # (B?, ntiles, T) f32
         bsel = jnp.arange(nslots, dtype=jnp.int32)
     batch, ntiles = carry.shape[0], carry.shape[1]
 
-    grid_spec = pltpu.PrefetchScalarGridSpec(
-        num_scalar_prefetch=3,
-        grid=(nslots, batch),
-        in_specs=[
+    if features:
+        d = feature_dim
+        in_specs = [
+            pl.BlockSpec((1, 1, t, d),
+                         lambda i, b, bs, bd, sel: (b, bs[i], 0, 0)),
+            pl.BlockSpec((batch, 1, t, d),
+                         lambda i, b, bs, bd, sel: (0, bd[i], 0, 0)),
+            pl.BlockSpec((1, t, t),
+                         lambda i, b, bs, bd, sel: (sel[i], 0, 0)),
+        ]
+        out_spec = pl.BlockSpec((batch, 1, t, d),
+                                lambda i, b, bs, bd, sel: (0, bd[i], 0, 0))
+        out_shape = jax.ShapeDtypeStruct((batch, ntiles, t, d), jnp.float32)
+    else:
+        in_specs = [
             pl.BlockSpec((1, 1, t),
                          lambda i, b, bs, bd, sel: (b, bs[i], 0)),  # src vals
             pl.BlockSpec((batch, 1, t),
                          lambda i, b, bs, bd, sel: (0, bd[i], 0)),  # carry
             pl.BlockSpec((1, t, t),
                          lambda i, b, bs, bd, sel: (sel[i], 0, 0)),  # block
-        ],
-        out_specs=pl.BlockSpec((batch, 1, t),
-                               lambda i, b, bs, bd, sel: (0, bd[i], 0)),
+        ]
+        out_spec = pl.BlockSpec((batch, 1, t),
+                                lambda i, b, bs, bd, sel: (0, bd[i], 0))
+        out_shape = jax.ShapeDtypeStruct((batch, ntiles, t), jnp.float32)
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=3,
+        grid=(nslots, batch),
+        in_specs=in_specs,
+        out_specs=out_spec,
     )
     kwargs = {}
     if not interpret:
         kwargs["compiler_params"] = pltpu.CompilerParams(
             dimension_semantics=("arbitrary", "arbitrary"))
     out = pl.pallas_call(
-        _make_relax_kernel(semiring),
+        _make_relax_kernel(semiring, feature_dim),
         grid_spec=grid_spec,
-        out_shape=jax.ShapeDtypeStruct((batch, ntiles, t), jnp.float32),
+        out_shape=out_shape,
         input_output_aliases={4: 0},   # alias carry -> out: untouched tiles
         interpret=interpret,           # keep their carry values
         **kwargs,

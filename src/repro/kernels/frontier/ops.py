@@ -106,20 +106,35 @@ class BlockedGraph:
                              "construct it via build_blocks(graph, algo)")
         return self.algebra.semiring
 
-    def to_tiled(self, attrs_orig: np.ndarray, fill=None) -> jnp.ndarray:
+    def to_tiled(self, attrs_orig: np.ndarray, fill=None,
+                 features: bool = False) -> jnp.ndarray:
         """(n,) -> (ntiles, T), or batched (B, n) -> (B, ntiles, T);
-        padded lanes hold `fill` (default: the ⊕-identity)."""
+        padded lanes hold `fill` (default: the ⊕-identity).
+        `features=True` treats the trailing axis as the feature width d:
+        (n, d) -> (ntiles, T, d), (B, n, d) -> (B, ntiles, T, d)."""
         if fill is None:
             fill = np.float32(self.semiring.zero)
         attrs_orig = np.asarray(attrs_orig)
+        if features:
+            lead, d = attrs_orig.shape[:-2], attrs_orig.shape[-1]
+            out = np.full(lead + (self.padded_n, d), fill, dtype=np.float32)
+            out[..., self.perm, :] = attrs_orig
+            return jnp.asarray(
+                out.reshape(lead + (self.ntiles, self.tile, d)))
         lead = attrs_orig.shape[:-1]
         out = np.full(lead + (self.padded_n,), fill, dtype=np.float32)
         out[..., self.perm] = attrs_orig
         return jnp.asarray(out.reshape(lead + (self.ntiles, self.tile)))
 
-    def to_orig(self, attrs_tiled) -> np.ndarray:
-        """(ntiles, T) -> (n,), or batched (B, ntiles, T) -> (B, n)."""
+    def to_orig(self, attrs_tiled, features: bool = False) -> np.ndarray:
+        """(ntiles, T) -> (n,), or batched (B, ntiles, T) -> (B, n);
+        with `features=True` the trailing feature axis rides along:
+        (…, ntiles, T, d) -> (…, n, d)."""
         flat = np.asarray(attrs_tiled)
+        if features:
+            d = flat.shape[-1]
+            flat = flat.reshape(flat.shape[:-3] + (-1, d))
+            return flat[..., self.perm, :]
         flat = flat.reshape(flat.shape[:-2] + (-1,))
         return flat[..., self.perm]
 
@@ -371,16 +386,19 @@ def build_blocks(graph: Graph, algo: str | VertexAlgebra = "sssp",
 # --------------------------------------------------------------------- #
 # frontier compaction: per-tile activity -> compacted block stream
 # --------------------------------------------------------------------- #
-def tile_activity(src_vals, semiring: Semiring):
-    """(…, ntiles, T) source values -> (ntiles,) bool per-tile activity.
+def tile_activity(src_vals, semiring: Semiring, features: bool = False):
+    """(…, ntiles, T[, d]) source values -> (ntiles,) bool per-tile
+    activity.
 
-    A tile is active iff any of its lanes (for any query of the batch)
-    differs from the ⊕-identity -- the same condition as the kernel's
-    packet trigger, so a block whose source tile is inactive contributes
-    exactly nothing (the ⊕-identity annihilates ⊗) and may be dropped
-    from the stream without changing a single bit of the result.
+    A tile is active iff any of its lanes (for any query of the batch,
+    any feature lane when `features=True`) differs from the ⊕-identity --
+    the same condition as the kernel's packet trigger, so a block whose
+    source tile is inactive contributes exactly nothing (the ⊕-identity
+    annihilates ⊗) and may be dropped from the stream without changing a
+    single bit of the result.
     """
-    act = jnp.any(src_vals != np.float32(semiring.zero), axis=-1)
+    axes = (-2, -1) if features else (-1,)
+    act = jnp.any(src_vals != np.float32(semiring.zero), axis=axes)
     if act.ndim > 1:                       # batched: active for any query
         act = jnp.any(act, axis=tuple(range(act.ndim - 1)))
     return act
@@ -414,45 +432,60 @@ def compact_block_stream(tile_act, bsrc, bdst):
     return (sel, jnp.take(bsrc, fill), jnp.take(bdst, fill), n_active)
 
 
-@functools.partial(jax.jit, static_argnames=("semiring",))
+@functools.partial(jax.jit, static_argnames=("semiring", "features"))
 def _relax_jnp(src_vals, carry, blocks, bsrc, bdst,
-               semiring: Semiring = MIN_PLUS):
+               semiring: Semiring = MIN_PLUS, features: bool = False):
     """Vectorized fallback: per-block ⊗-combine + segment-⊕ by bdst.
 
     Accepts (ntiles, T) state or batched (B, ntiles, T): the combine
     broadcasts the shared blocks over the query axis (XLA fuses the
     ⊗+reduce, so the (B, nb, T, T) product is never materialized) and the
-    segment-⊕ maps over queries.
+    segment-⊕ maps over queries. `features=True` switches to vector state
+    ((…, ntiles, T, d)): the combine becomes the semiring's (T, T) × (T, d)
+    tile contraction (a matmul for (+, ×)) and the segment-⊕ carries the
+    feature axis along.
     """
-    ntiles = carry.shape[-2]
-    sv = jnp.take(src_vals, bsrc, axis=-2)               # (..., nb, T)
-    cand = semiring.add_reduce_jnp(
-        semiring.mul_jnp(sv[..., :, None], blocks), axis=-2)  # (..., nb, T)
+    tax = -3 if features else -2
+    ntiles = carry.shape[tax]
+    sv = jnp.take(src_vals, bsrc, axis=tax)          # (..., nb, T[, d])
+    if features:
+        cand = semiring.contract_jnp(sv, blocks)     # (..., nb, T, d)
+    else:
+        cand = semiring.add_reduce_jnp(
+            semiring.mul_jnp(sv[..., :, None], blocks), axis=-2)
     def seg(x):
         return semiring.segment_reduce_jnp(x, bdst, ntiles)
-    best = jax.vmap(seg)(cand) if cand.ndim == 3 else seg(cand)
+    batched = cand.ndim == (4 if features else 3)
+    best = jax.vmap(seg)(cand) if batched else seg(cand)
     return semiring.add_jnp(carry, best)
 
 
-@functools.partial(jax.jit, static_argnames=("semiring",))
+@functools.partial(jax.jit, static_argnames=("semiring", "features"))
 def _relax_jnp_compact(src_vals, carry, blocks_ext, bsrc, bdst, bsel,
-                       semiring: Semiring = MIN_PLUS):
+                       semiring: Semiring = MIN_PLUS,
+                       features: bool = False):
     """Compacted jnp relax: ⊗-combine + segment-⊕ over only the blocks
     named by ``bsel`` (a prefix of active block ids padded with the
     sentinel index nb). Sentinel rows gather the all-identity block, so
     they contribute the ⊕-identity to their segment: bit-for-bit the
-    dense result, at O(len(bsel)·T²) instead of O(nb·T²).
+    dense result, at O(len(bsel)·T²) instead of O(nb·T²). Vector state
+    (`features=True`) contracts each gathered block over its (T, d) slab.
     """
-    ntiles = carry.shape[-2]
+    tax = -3 if features else -2
+    ntiles = carry.shape[tax]
     src_ix = jnp.take(bsrc, bsel, mode="clip")      # sentinel -> last block
     seg_ix = jnp.take(bdst, bsel, mode="clip")
-    sv = jnp.take(src_vals, src_ix, axis=-2)             # (..., k, T)
+    sv = jnp.take(src_vals, src_ix, axis=tax)            # (..., k, T[, d])
     w = jnp.take(blocks_ext, bsel, axis=0)               # (k, T, T)
-    cand = semiring.add_reduce_jnp(
-        semiring.mul_jnp(sv[..., :, None], w), axis=-2)  # (..., k, T)
+    if features:
+        cand = semiring.contract_jnp(sv, w)              # (..., k, T, d)
+    else:
+        cand = semiring.add_reduce_jnp(
+            semiring.mul_jnp(sv[..., :, None], w), axis=-2)
     def seg(x):
         return semiring.segment_reduce_jnp(x, seg_ix, ntiles)
-    best = jax.vmap(seg)(cand) if cand.ndim == 3 else seg(cand)
+    batched = cand.ndim == (4 if features else 3)
+    best = jax.vmap(seg)(cand) if batched else seg(cand)
     return semiring.add_jnp(carry, best)
 
 
@@ -460,24 +493,26 @@ _BUCKET_MIN = 8     # smallest compacted-list size: bounds executables at
                     # ~log2(nb) buckets per (semiring, state shape)
 
 
-def _relax_jnp_bucketed(src_vals, carry, bg: "BlockedGraph"):
+def _relax_jnp_bucketed(src_vals, carry, bg: "BlockedGraph",
+                        features: bool = False):
     """Host-side compacted jnp step for concrete (non-traced) inputs: read
     the active count, round it up to a power-of-two bucket, and run the
     bucket-sized compacted relax. Falls back to the dense step when the
     bucket would not be smaller than the full list."""
     sr = bg.semiring
     nb = int(bg.bsrc.shape[0])
-    act = np.asarray(tile_activity(src_vals, sr))[bg.bsrc_np]
+    act = np.asarray(tile_activity(src_vals, sr, features))[bg.bsrc_np]
     idx = np.flatnonzero(act).astype(np.int32)
     bucket = max(_BUCKET_MIN,
                  1 << int(idx.size - 1).bit_length() if idx.size else 0)
     if bucket >= nb:
         return _relax_jnp(src_vals, carry, bg.blocks, bg.bsrc, bg.bdst,
-                          semiring=sr)
+                          semiring=sr, features=features)
     bsel = np.full(bucket, nb, dtype=np.int32)
     bsel[:idx.size] = idx
     return _relax_jnp_compact(src_vals, carry, bg.blocks_ext, bg.bsrc,
-                              bg.bdst, jnp.asarray(bsel), semiring=sr)
+                              bg.bdst, jnp.asarray(bsel), semiring=sr,
+                              features=features)
 
 
 def resolve_relax_mode(mode: str) -> str:
@@ -490,11 +525,13 @@ def resolve_relax_mode(mode: str) -> str:
 
 
 def frontier_relax(src_vals, carry, bg: BlockedGraph, mode: str = "auto",
-                   compact: bool = False):
+                   compact: bool = False, feature_dim: int = 1):
     """One frontier relaxation step over a BlockedGraph.
 
     src_vals: (ntiles, T) f32 -- attrs where active, ⊕-identity where
-              not -- or (B, ntiles, T) for a batch of B queries.
+              not -- or (B, ntiles, T) for a batch of B queries. At
+              feature_dim d > 1 the state grows a trailing feature axis:
+              (ntiles, T, d) / (B, ntiles, T, d).
     carry:    same shape; values merged into every destination.
     mode: 'auto' | 'pallas' | 'interpret' | 'jnp'.
     compact: frontier-compacted block streaming -- stream only blocks
@@ -503,8 +540,17 @@ def frontier_relax(src_vals, carry, bg: BlockedGraph, mode: str = "auto",
              compaction runs on-device with static shapes; on the jnp
              path it buckets host-side, so under a trace (e.g. inside
              `lax.while_loop`) it falls back to the dense step.
+    feature_dim: static feature width d; must match the state's trailing
+             axis when > 1 (explicit, because (ntiles, T, d) and
+             (B, ntiles, T) are rank-ambiguous).
     """
     sr = bg.semiring
+    features = feature_dim > 1
+    if features and src_vals.shape[-1] != feature_dim:
+        raise ValueError(
+            f"frontier_relax: state trailing axis {src_vals.shape[-1]} "
+            f"!= feature_dim {feature_dim} (state shape "
+            f"{tuple(src_vals.shape)})")
     mode = resolve_relax_mode(mode)
     if mode == "pallas" and jax.default_backend() != "tpu":
         raise ValueError(
@@ -515,21 +561,22 @@ def frontier_relax(src_vals, carry, bg: BlockedGraph, mode: str = "auto",
     if mode == "jnp":
         if not compact:
             return _relax_jnp(src_vals, carry, bg.blocks, bg.bsrc, bg.bdst,
-                              semiring=sr)
+                              semiring=sr, features=features)
         if isinstance(src_vals, jax.core.Tracer):
             # traced shapes cannot shrink: the dense step *is* the
             # compacted stream's fixed-size upper bound, and it avoids a
             # pointless full-width gather of blocks_ext
             return _relax_jnp(src_vals, carry, bg.blocks, bg.bsrc, bg.bdst,
-                              semiring=sr)
-        return _relax_jnp_bucketed(src_vals, carry, bg)
+                              semiring=sr, features=features)
+        return _relax_jnp_bucketed(src_vals, carry, bg, features=features)
     interpret = mode == "interpret"
     if not compact:
         return frontier_relax_pallas(src_vals, carry, bg.blocks, bg.bsrc,
                                      bg.bdst, semiring=sr,
-                                     interpret=interpret)
+                                     interpret=interpret,
+                                     feature_dim=feature_dim)
     bsel, bsrc_c, bdst_c, _ = compact_block_stream(
-        tile_activity(src_vals, sr), bg.bsrc, bg.bdst)
+        tile_activity(src_vals, sr, features), bg.bsrc, bg.bdst)
     return frontier_relax_pallas(src_vals, carry, bg.blocks_ext, bsrc_c,
                                  bdst_c, semiring=sr, interpret=interpret,
-                                 bsel=bsel)
+                                 bsel=bsel, feature_dim=feature_dim)

@@ -61,6 +61,12 @@ def main():
                     choices=["auto", "on", "off"],
                     help="frontier-compacted block streaming for the "
                          "jax/dist engines (auto = on for data mode)")
+    ap.add_argument("--feature-dim", type=int, default=0,
+                    help="feature width d of the vertex state: 0 adopts "
+                         "the program's native width (1 for scalar "
+                         "programs, 8 for multi_bfs/labelprop); d > 1 "
+                         "on a scalar program runs d broadcast lanes. "
+                         "jax/dist engines only")
     ap.add_argument("--updates", default=None, metavar="FILE",
                     help="JSON file of streaming edge mutations: a list "
                          "of [u, v, w] entries (w = null deletes, "
@@ -103,6 +109,11 @@ def main():
         raise SystemExit("--trace traces one query/fixpoint; drop "
                          "--batch (use serve_graph --stats for serving "
                          "telemetry)")
+    if args.engine == "sim" and (args.feature_dim > 1
+                                 or PROGRAMS[args.algo].feature_dim > 1):
+        raise SystemExit("--engine sim runs scalar vertex state only; "
+                         "vector programs / --feature-dim > 1 need "
+                         "--engine jax/dist")
 
     g = next(make_dataset(args.dataset, 1, seed0=args.graph_seed))
     print(f"[graph] {args.dataset}: |V|={g.n} |E|={g.m}")
@@ -145,7 +156,8 @@ def main():
                   f"vs op-centric CGRA {cgra.time_us / t_f:.1f}x")
     else:
         plan = flip.plan_from_cli(args.engine, args.mode,
-                                  compact=args.compact)
+                                  compact=args.compact,
+                                  feature_dim=args.feature_dim)
         cq = flip.compile(g, args.algo, plan, mapping=mapping)
         t0 = time.time()
         res = cq.query(args.src, trace=bool(args.trace))
@@ -229,7 +241,8 @@ def _run_batched(args, g, mapping, srcs) -> bool:
         from repro.launch.serve_graph import GraphServer
         plan = flip.plan_from_cli(args.engine, args.mode,
                                   compact=args.compact,
-                                  batch=args.batch)
+                                  batch=args.batch,
+                                  feature_dim=args.feature_dim)
         srv = GraphServer(g, plan=plan, mapping=mapping)
         reqs = srv.serve((args.algo, s) for s in srcs)
         outs = [r.result for r in reqs]
@@ -238,7 +251,8 @@ def _run_batched(args, g, mapping, srcs) -> bool:
                f"B={args.batch}")
     else:
         plan = flip.plan_from_cli(args.engine, args.mode,
-                                  compact=args.compact)
+                                  compact=args.compact,
+                                  feature_dim=args.feature_dim)
         res = flip.compile(g, args.algo, plan, mapping=mapping).query(
             np.asarray(srcs), trace=bool(args.trace))
         outs, steps = res.attrs, res.steps

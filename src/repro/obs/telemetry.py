@@ -82,17 +82,30 @@ class DispatchTelemetry:
     trace: StepTrace
     wall_s: float = 0.0
     truncated: bool = False   # fixpoint outran the trace row capacity
+    tile: int = 0           # T (0 when unknown, e.g. the sim bridge)
+    feature_dim: int = 1    # feature width d of the vertex state
     meta: dict = dataclasses.field(default_factory=dict)
 
     def summary(self) -> dict:
-        """Aggregates the autotuner's cost model and the benches consume."""
+        """Aggregates the autotuner's cost model and the benches consume.
+
+        The HBM-bytes estimates scale with the feature width d: the
+        weight stream is d-independent (each fetched block is (T, T)
+        f32), while the per-step state stream -- the (B, ntiles, T, d)
+        read + write every relax step performs -- carries a factor of d.
+        That asymmetry IS the vector-state win: the same weight traffic
+        feeds d feature lanes.
+        """
         tr, nt = self.trace, max(self.ntiles, 1)
         nsteps = len(tr)
+        t, d = self.tile, max(self.feature_dim, 1)
+        state_lane_bytes = 2 * self.batch * nt * t * d * 4  # rd + wr
         return {
             "backend": self.backend,
             "mode": self.mode,
             "compact": self.compact,
             "batch": self.batch,
+            "feature_dim": d,
             "steps_max": int(self.steps.max()) if self.steps.size else 0,
             "steps_mean": float(self.steps.mean()) if self.steps.size
             else 0.0,
@@ -105,6 +118,9 @@ class DispatchTelemetry:
                 float(tr.active_tiles.mean()) / nt if nsteps else 0.0),
             "blocks_fetched_total": int(tr.blocks_fetched.sum()),
             "blocks_skipped_total": int(tr.blocks_skipped.sum()),
+            "hbm_weight_bytes_est": int(tr.blocks_fetched.sum()) * t * t
+            * 4,
+            "hbm_state_bytes_est": nsteps * state_lane_bytes,
             "wall_s": self.wall_s,
         }
 
@@ -113,7 +129,8 @@ class DispatchTelemetry:
             "backend": self.backend, "mode": self.mode,
             "compact": self.compact, "batch": self.batch,
             "n": self.n, "ntiles": self.ntiles,
-            "n_blocks": self.n_blocks,
+            "n_blocks": self.n_blocks, "tile": self.tile,
+            "feature_dim": self.feature_dim,
             "steps": [int(s) for s in np.atleast_1d(self.steps)],
             "wall_s": self.wall_s, "truncated": self.truncated,
             "meta": self.meta, "trace": self.trace.to_json(),
@@ -138,6 +155,7 @@ class QueryTelemetry:
             "mean_active_vertices": 0.0,
             "mean_active_tile_fraction": 0.0,
             "blocks_fetched_total": 0, "blocks_skipped_total": 0,
+            "hbm_weight_bytes_est": 0, "hbm_state_bytes_est": 0,
         }
         w = 0
         for d in self.dispatches:
@@ -148,6 +166,8 @@ class QueryTelemetry:
             out["truncated"] |= s["truncated"]
             out["blocks_fetched_total"] += s["blocks_fetched_total"]
             out["blocks_skipped_total"] += s["blocks_skipped_total"]
+            out["hbm_weight_bytes_est"] += s["hbm_weight_bytes_est"]
+            out["hbm_state_bytes_est"] += s["hbm_state_bytes_est"]
             if k:
                 out["mean_active_vertices"] += s["mean_active_vertices"] * k
                 out["mean_active_tile_fraction"] += \

@@ -25,7 +25,12 @@ import pytest                  # noqa: E402
 from repro.algebra import ALGEBRAS, VertexAlgebra   # noqa: E402
 from repro.graphs import reference                  # noqa: E402
 
-ALGOS = sorted(ALGEBRAS)
+# scalar programs only: the shape-sensitive suites ((B, n) results,
+# sim parity, solo-vs-batch bit-exactness) run over these; the vector
+# programs (feature_dim > 1) have their own (n, d) suites in
+# test_features.py / test_fuzz_differential.py.
+ALGOS = sorted(a for a in ALGEBRAS if ALGEBRAS[a].feature_dim == 1)
+VEC_ALGOS = sorted(a for a in ALGEBRAS if ALGEBRAS[a].feature_dim > 1)
 SIM_ALGOS = [a for a in ALGOS if ALGEBRAS[a].sim_ok]
 SRCS8 = np.array([3, 11, 0, 27, 42, 8, 19, 33])     # B=8 fixed sources
 
@@ -76,6 +81,17 @@ def masked_src_vals(bg, attrs, rng, density):
         mask = rng.random(attrs.shape) < density
     return jnp.where(jnp.asarray(mask), attrs,
                      np.float32(bg.semiring.zero))
+
+
+def np_contract(sr, sv, w):
+    """Plain-numpy feature contraction oracle for the vector-state
+    kernels: out[D, f] = ⊕_s sv[s, f] ⊗ w[s, D], built from the
+    semiring's numpy ops (independent of `Semiring.contract_jnp`)."""
+    vals = sr.mul_np(sv[:, None, :], w[:, :, None])      # (S, D, d)
+    out = vals[0]
+    for s in range(1, vals.shape[0]):
+        out = sr.add_np(out, vals[s])
+    return out
 
 
 def check_batch(eng, g, srcs, algo):

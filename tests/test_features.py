@@ -1,0 +1,329 @@
+"""Vector-valued vertex state: (T, d) feature blocks.
+
+Covers the feature-dim contract end to end:
+
+  * `Semiring.contract_jnp` vs a plain-numpy per-tile oracle for every
+    semiring (MXU matmul for (+, x), slab-swept broadcast-⊕-reduce for
+    the idempotent ones, including d that is not a slab multiple);
+  * d = 1 stays bit-exact with the scalar path (explicit
+    plan.feature_dim=1 == default plan, for every scalar algebra x
+    {jnp, interpret} x {solo, batched});
+  * scalar programs forced to d > 1 run d broadcast lanes (idempotent
+    algebras column-for-column bit-exact with the scalar run);
+  * the vector programs (multi_bfs, labelprop) match their (n, d) numpy
+    oracles through solo, batched, bucketed-serving, warm-start and
+    distributed execution;
+  * shape/plan validation fails loudly: d-inconsistent kernel inputs,
+    warm states of the wrong width, plans forcing a vector program off
+    its native width;
+  * `_make_relax_kernel`'s cache keys on (semiring, feature_dim).
+"""
+import dataclasses
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from conftest import ALGOS, VEC_ALGOS, SRCS8, np_contract, oracle
+from repro import api as flip
+from repro.algebra import (ALGEBRAS, MAX_MIN, MIN_PLUS, OR_AND,
+                           PLUS_TIMES, landmarks)
+from repro.graphs import make_synthetic, reference
+from repro.kernels.frontier import build_blocks, frontier_relax
+from repro.kernels.frontier.frontier import (_make_relax_kernel,
+                                             frontier_relax_pallas)
+
+SEMIRINGS = [MIN_PLUS, MAX_MIN, OR_AND, PLUS_TIMES]
+
+
+def _state(rng, sr, shape):
+    """Random finite state values inside each semiring's domain."""
+    if sr is OR_AND:
+        return (rng.random(shape) < 0.5).astype(np.float32)
+    return rng.uniform(0.5, 4.0, shape).astype(np.float32)
+
+
+# ------------------------------------------------------------------ #
+# contract_jnp semantics
+# ------------------------------------------------------------------ #
+@pytest.mark.parametrize("sr", SEMIRINGS, ids=lambda s: s.name)
+@pytest.mark.parametrize("d", [1, 3, 8, 20])   # 20 spans 3 slab sweeps
+def test_contract_matches_numpy_oracle(sr, d):
+    rng = np.random.default_rng(7)
+    sv = _state(rng, sr, (16, d))
+    w = _state(rng, sr, (16, 12))
+    got = np.asarray(sr.contract_jnp(jnp.asarray(sv), jnp.asarray(w)))
+    want = np_contract(sr, sv, w)
+    assert got.shape == (12, d)
+    if sr.idempotent:
+        np.testing.assert_array_equal(got, want)
+    else:
+        np.testing.assert_allclose(got, want, rtol=1e-5, atol=1e-5)
+
+
+def test_contract_batched_leading_axes():
+    rng = np.random.default_rng(1)
+    sv = rng.uniform(0, 2, (2, 5, 16, 3)).astype(np.float32)
+    w = rng.uniform(0, 2, (2, 5, 16, 16)).astype(np.float32)
+    got = np.asarray(MIN_PLUS.contract_jnp(jnp.asarray(sv),
+                                           jnp.asarray(w)))
+    assert got.shape == (2, 5, 16, 3)
+    for b in range(2):
+        for k in range(5):
+            np.testing.assert_array_equal(
+                got[b, k], np_contract(MIN_PLUS, sv[b, k], w[b, k]))
+
+
+# ------------------------------------------------------------------ #
+# kernel layer: frontier_relax with feature blocks
+# ------------------------------------------------------------------ #
+@pytest.mark.parametrize("sr", SEMIRINGS, ids=lambda s: s.name)
+@pytest.mark.parametrize("mode", ["jnp", "interpret"])
+@pytest.mark.parametrize("batched", [False, True])
+def test_relax_features_matches_dense_oracle(sr, mode, batched):
+    """One relax step on (ntiles, T, d) state vs the per-tile numpy
+    contraction oracle, through the real BlockGraph dispatch."""
+    g = make_synthetic(60, 180, seed=5)
+    algo = {MIN_PLUS: "sssp", MAX_MIN: "widest", OR_AND: "reach",
+            PLUS_TIMES: "pagerank"}[sr]
+    bg = build_blocks(g, algo=algo, tile=16)
+    d = 4
+    rng = np.random.default_rng(3)
+    shape = ((2,) if batched else ()) + (bg.ntiles, bg.tile, d)
+    sv = _state(rng, sr, shape)
+    carry = _state(rng, sr, shape)
+    out = np.asarray(frontier_relax(
+        jnp.asarray(sv), jnp.asarray(carry), bg, mode=mode,
+        feature_dim=d))
+    blocks = np.asarray(bg.blocks)
+    bsrc, bdst = np.asarray(bg.bsrc), np.asarray(bg.bdst)
+
+    # oracle: cand[dst] accumulated over blocks, then carry ⊕ cand
+    def one(svb, carryb):
+        new = carryb.copy()
+        for i in range(len(bsrc)):
+            c = np_contract(sr, svb[bsrc[i]], blocks[i])
+            new[bdst[i]] = sr.add_np(new[bdst[i]], c)
+        return new
+    if batched:
+        want = np.stack([one(sv[b], carry[b]) for b in range(2)])
+    else:
+        want = one(sv, carry)
+    if sr.idempotent:
+        np.testing.assert_array_equal(out, want)
+    else:
+        np.testing.assert_allclose(out, want, rtol=1e-4, atol=1e-4)
+
+
+def test_relax_feature_dim_mismatch_raises():
+    g = make_synthetic(40, 100, seed=0)
+    bg = build_blocks(g, algo="sssp", tile=16)
+    sv = jnp.zeros((bg.ntiles, bg.tile, 4), jnp.float32)
+    with pytest.raises(ValueError, match="feature_dim"):
+        frontier_relax(sv, sv, bg, mode="jnp", feature_dim=8)
+
+
+def test_relax_kernel_cache_keys_on_feature_dim():
+    k1 = _make_relax_kernel(MIN_PLUS, 1)
+    k8 = _make_relax_kernel(MIN_PLUS, 8)
+    assert k1 is not k8
+    assert _make_relax_kernel(MIN_PLUS, 8) is k8
+    assert _make_relax_kernel(PLUS_TIMES, 8) is not k8
+
+
+def test_pallas_interpret_features_matches_jnp():
+    g = make_synthetic(60, 180, seed=5)
+    bg = build_blocks(g, algo="sssp", tile=16)
+    rng = np.random.default_rng(9)
+    sv = rng.uniform(0.5, 4, (bg.ntiles, bg.tile, 4)).astype(np.float32)
+    carry = rng.uniform(0.5, 4, sv.shape).astype(np.float32)
+    a = frontier_relax(jnp.asarray(sv), jnp.asarray(carry), bg,
+                       mode="interpret", feature_dim=4)
+    b = frontier_relax(jnp.asarray(sv), jnp.asarray(carry), bg,
+                       mode="jnp", feature_dim=4)
+    np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+# ------------------------------------------------------------------ #
+# d = 1 bit-exactness with the scalar path
+# ------------------------------------------------------------------ #
+@pytest.mark.parametrize("relax_mode", ["jnp", "interpret"])
+@pytest.mark.parametrize("algo", ALGOS)
+def test_d1_bit_exact_with_scalar_path(algo, relax_mode):
+    """plan.feature_dim=1 must be the *same* execution as the default
+    plan, bit for bit, solo and batched -- d=1 routes through the
+    untouched scalar kernel bodies."""
+    g = make_synthetic(70, 200, seed=2)
+    base = flip.ExecutionPlan(relax_mode=relax_mode)
+    forced = flip.ExecutionPlan(relax_mode=relax_mode, feature_dim=1)
+    r0 = flip.compile(g, algo, base).query(3)
+    r1 = flip.compile(g, algo, forced).query(3)
+    np.testing.assert_array_equal(r0.attrs, r1.attrs)
+    assert r0.steps == r1.steps
+    b0 = flip.compile(g, algo, base).query(SRCS8[:4] % g.n)
+    b1 = flip.compile(g, algo, forced).query(SRCS8[:4] % g.n)
+    np.testing.assert_array_equal(b0.attrs, b1.attrs)
+    np.testing.assert_array_equal(b0.steps, b1.steps)
+
+
+# ------------------------------------------------------------------ #
+# scalar programs at d > 1: broadcast feature lanes
+# ------------------------------------------------------------------ #
+@pytest.mark.parametrize("algo", ["bfs", "sssp", "widest", "reach"])
+def test_broadcast_lanes_match_scalar_columnwise(algo):
+    """Idempotent algebras at forced d: every feature column is the
+    scalar run, bit for bit (same elementwise ops per lane)."""
+    g = make_synthetic(70, 200, seed=2)
+    scalar = flip.compile(g, algo).query(5).attrs
+    vec = flip.compile(g, algo,
+                       flip.ExecutionPlan(feature_dim=4)).query(5).attrs
+    assert vec.shape == (g.n, 4)
+    for f in range(4):
+        np.testing.assert_array_equal(vec[:, f], scalar)
+
+
+def test_broadcast_lanes_pagerank_close():
+    g = make_synthetic(70, 200, seed=2)
+    scalar = flip.compile(g, "pagerank").query(0).attrs
+    vec = flip.compile(g, "pagerank",
+                       flip.ExecutionPlan(feature_dim=3)).query(0).attrs
+    assert vec.shape == (g.n, 3)
+    for f in range(3):
+        np.testing.assert_allclose(vec[:, f], scalar, rtol=1e-4,
+                                   atol=1e-5)
+
+
+# ------------------------------------------------------------------ #
+# vector programs vs their (n, d) oracles
+# ------------------------------------------------------------------ #
+@pytest.mark.parametrize("relax_mode", ["jnp", "interpret"])
+@pytest.mark.parametrize("algo", VEC_ALGOS)
+def test_vector_programs_match_oracle(algo, relax_mode):
+    g = make_synthetic(80, 240, seed=4)
+    d = ALGEBRAS[algo].feature_dim
+    res = flip.compile(g, algo,
+                       flip.ExecutionPlan(relax_mode=relax_mode)).query(3)
+    assert res.attrs.shape == (g.n, d)
+    ref = oracle(algo, g, 3)
+    assert ref.shape == (g.n, d)
+    assert ALGEBRAS[algo].results_match(res.attrs, ref)
+    assert res.check()
+
+
+@pytest.mark.parametrize("algo", VEC_ALGOS)
+def test_vector_programs_batched(algo):
+    g = make_synthetic(80, 240, seed=4)
+    d = ALGEBRAS[algo].feature_dim
+    srcs = SRCS8[:3] % g.n
+    res = flip.compile(g, algo).query(srcs)
+    assert res.attrs.shape == (len(srcs), g.n, d)
+    for b, s in enumerate(srcs):
+        assert ALGEBRAS[algo].results_match(res.attrs[b],
+                                            oracle(algo, g, int(s))), b
+
+
+def test_vector_bucketed_serving():
+    from repro.launch.serve_graph import GraphServer
+    g = make_synthetic(80, 240, seed=4)
+    srcs = [0, 5, 9, 13, 21]
+    srv = GraphServer(g, plan=flip.ExecutionPlan(batch=4))
+    reqs = srv.serve([("multi_bfs", s) for s in srcs])
+    for r, s in zip(reqs, srcs):
+        assert r.result.shape == (g.n, 8)
+        assert ALGEBRAS["multi_bfs"].results_match(
+            r.result, oracle("multi_bfs", g, s)), s
+
+
+def test_vector_distributed():
+    g = make_synthetic(80, 240, seed=4)
+    res = flip.compile(g, "multi_bfs",
+                       flip.ExecutionPlan(distributed=True)).query(3)
+    assert ALGEBRAS["multi_bfs"].results_match(res.attrs,
+                                               oracle("multi_bfs", g, 3))
+
+
+def test_labelprop_labels_are_argmax_communities():
+    """The point of labelprop: argmax over the feature axis assigns
+    every reachable vertex the label of its dominant landmark, and each
+    landmark claims itself."""
+    g = make_synthetic(80, 240, seed=4)
+    res = flip.compile(g, "labelprop").query(3)
+    lm = landmarks(g.n, 3, 8)
+    labels = np.argmax(res.attrs, axis=1)
+    np.testing.assert_array_equal(labels[lm], np.arange(8))
+
+
+# ------------------------------------------------------------------ #
+# warm starts with vector state
+# ------------------------------------------------------------------ #
+def test_vector_warm_start_matches_recompute():
+    g = make_synthetic(80, 240, seed=4)
+    cq = flip.compile(g, "multi_bfs")
+    r0 = cq.query(3)
+    cq2, delta = cq.update([(3, 60, 1.0)])
+    warm = cq2.query(3, warm=r0)
+    cold = cq2.query(3)
+    np.testing.assert_array_equal(warm.attrs, cold.attrs)
+    assert ALGEBRAS["multi_bfs"].results_match(
+        warm.attrs, oracle("multi_bfs", cq2.graph, 3))
+
+
+def test_vector_warm_width_mismatch_raises():
+    g = make_synthetic(80, 240, seed=4)
+    cq = flip.compile(g, "multi_bfs")
+    r0 = cq.query(3)
+    cq2, _ = cq.update([(3, 60, 1.0)])
+    bad = dataclasses.replace(r0, attrs=r0.attrs[..., 0])   # (n,) into d=8
+    with pytest.raises(ValueError, match="feature_dim"):
+        cq2.query(3, warm=bad)
+
+
+# ------------------------------------------------------------------ #
+# plan / engine validation
+# ------------------------------------------------------------------ #
+def test_plan_rejects_bad_feature_dim():
+    with pytest.raises(ValueError, match="feature_dim"):
+        flip.ExecutionPlan(feature_dim=-1).validate()
+    with pytest.raises(ValueError, match="feature_dim"):
+        flip.ExecutionPlan(feature_dim="8").validate()
+
+
+def test_plan_rejects_off_native_width_for_vector_program():
+    g = make_synthetic(40, 100, seed=0)
+    with pytest.raises(ValueError, match="native"):
+        flip.compile(g, "multi_bfs", flip.ExecutionPlan(feature_dim=4))
+    # feature_dim=0 (auto) and the native width both resolve fine
+    assert flip.compile(g, "multi_bfs").plan.feature_dim == 8
+    assert flip.compile(
+        g, "multi_bfs",
+        flip.ExecutionPlan(feature_dim=8)).plan.feature_dim == 8
+
+
+def test_plan_auto_adopts_native_width():
+    p = flip.ExecutionPlan().resolve(ALGEBRAS["labelprop"])
+    assert p.feature_dim == 8
+    p = flip.ExecutionPlan().resolve(ALGEBRAS["sssp"])
+    assert p.feature_dim == 1
+
+
+def test_plan_key_includes_feature_dim():
+    a = flip.ExecutionPlan(feature_dim=0).key()
+    b = flip.ExecutionPlan(feature_dim=8).key()
+    assert a != b
+
+
+# ------------------------------------------------------------------ #
+# telemetry: HBM estimates scale with d on the state stream only
+# ------------------------------------------------------------------ #
+def test_telemetry_state_bytes_scale_with_d():
+    g = make_synthetic(80, 240, seed=4)
+    r1 = flip.compile(g, "sssp").query(3, trace=True)
+    r8 = flip.compile(g, "sssp",
+                      flip.ExecutionPlan(feature_dim=8)).query(
+                          3, trace=True)
+    s1, s8 = (r.telemetry.dispatches[0].summary() for r in (r1, r8))
+    assert s1["feature_dim"] == 1 and s8["feature_dim"] == 8
+    # identical fixpoint trajectory per lane -> same steps, same weight
+    # traffic; the state stream carries the factor of d
+    assert s8["hbm_weight_bytes_est"] == s1["hbm_weight_bytes_est"]
+    assert s8["hbm_state_bytes_est"] == 8 * s1["hbm_state_bytes_est"]

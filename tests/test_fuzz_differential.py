@@ -28,15 +28,16 @@ setting, and any larger value soaks further.
 """
 import os
 
+import jax.numpy as jnp
 import numpy as np
 import pytest
-from conftest import ALGOS, SIM_ALGOS, oracle
+from conftest import ALGOS, SIM_ALGOS, VEC_ALGOS, np_contract, oracle
 
 from repro.algebra import ALGEBRAS
 from repro.core import PROGRAMS, compile_mapping, simulate
 from repro.core.engine import FlipEngine
 from repro.graphs import Graph, make_power_law, reference
-from repro.kernels.frontier import build_blocks
+from repro.kernels.frontier import build_blocks, frontier_relax
 
 SEEDS = range(int(os.environ.get("FUZZ_SEEDS", "50")))
 TILE = 16
@@ -149,3 +150,79 @@ def test_fuzz_differential(seed):
             err_msg=f"{interp_algo} incremental layout != rebuild after "
                     f"batch {step} {batch}; {repro}")
         g_cur = g_next
+
+
+# ------------------------------------------------------------------ #
+# vector-state fuzz: random (T, d) feature blocks through every algebra
+# ------------------------------------------------------------------ #
+def _random_features(rng, sr, shape, family):
+    """Random feature state inside the semiring's domain: a bounded
+    uniform family and a heavy-tailed power-law family (Pareto), the
+    latter stressing the ⊕-reduce with magnitudes spanning decades."""
+    if sr.name == "or_and":
+        return (rng.random(shape) < 0.5).astype(np.float32)
+    if family == "uniform":
+        vals = rng.uniform(0.25, 8.0, shape)
+    else:
+        vals = 0.25 + rng.pareto(1.5, shape)
+    return vals.astype(np.float32)
+
+
+@pytest.mark.parametrize("seed", SEEDS)
+def test_fuzz_features(seed):
+    """d > 1 differential: one frontier_relax step on random feature
+    state vs the per-tile numpy contraction oracle for **every**
+    algebra, plus the vector programs' full fixpoints vs their (n, d)
+    oracles, on the same alternating graph families as the scalar
+    fuzz."""
+    rng = np.random.default_rng(10_000 + seed)
+    family = "uniform" if seed % 2 else "power_law"
+    if seed % 2:
+        g = _random_uniform_graph(rng)
+    else:
+        n = int(rng.choice(NS_POWER))
+        g = make_power_law(n, int(rng.integers(2 * n, 4 * n)), seed=seed)
+    src = int(rng.integers(g.n))
+    d = int(rng.choice((2, 4, 8)))
+    repro = (f"repro: FUZZ_SEEDS={seed + 1} python -m pytest "
+             f"'tests/test_fuzz_differential.py::test_fuzz_features"
+             f"[{seed}]' | graph: n={g.n} m={g.m} "
+             f"directed={g.directed} family={family} src={src} d={d}")
+
+    interp_algo = ALGOS[seed % len(ALGOS)]
+    for algo in ALGOS:
+        sr = ALGEBRAS[algo].semiring
+        bg = build_blocks(g, algo=algo, tile=TILE)
+        shape = (bg.ntiles, bg.tile, d)
+        sv = _random_features(rng, sr, shape, family)
+        carry = _random_features(rng, sr, shape, family)
+        blocks = np.asarray(bg.blocks)
+        bsrc, bdst = np.asarray(bg.bsrc), np.asarray(bg.bdst)
+        want = carry.copy()
+        for i in range(len(bsrc)):
+            c = np_contract(sr, sv[bsrc[i]], blocks[i])
+            want[bdst[i]] = sr.add_np(want[bdst[i]], c)
+        modes = ("jnp", "interpret") if algo == interp_algo else ("jnp",)
+        for mode in modes:
+            got = np.asarray(frontier_relax(
+                jnp.asarray(sv), jnp.asarray(carry), bg, mode=mode,
+                feature_dim=d))
+            if sr.idempotent:
+                np.testing.assert_array_equal(
+                    got, want,
+                    err_msg=f"{algo} {mode} d={d} feature relax diverged "
+                            f"from numpy oracle; {repro}")
+            else:
+                np.testing.assert_allclose(
+                    got, want, rtol=1e-4, atol=1e-4,
+                    err_msg=f"{algo} {mode} d={d} feature relax diverged "
+                            f"from numpy oracle; {repro}")
+
+    # vector programs: full engine fixpoint vs the (n, d) oracle,
+    # rotated so each seed runs one of them (labelprop fixpoints are
+    # long) and the corpus covers both
+    algo = VEC_ALGOS[seed % len(VEC_ALGOS)]
+    eng = FlipEngine.build(g, algo, tile=TILE, relax_mode="jnp")
+    got, _ = eng.run(src)
+    assert ALGEBRAS[algo].results_match(got, oracle(algo, g, src)), \
+        f"{algo} engine diverged from (n, d) oracle; {repro}"
