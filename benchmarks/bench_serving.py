@@ -1,0 +1,118 @@
+"""Serving-resilience overhead guard: the failure model must be free
+when nothing fails.
+
+Runs the same steady-state request stream through two `GraphServer`s
+over one shared graph -- ``resilience=False`` (the bare dispatch path)
+vs ``resilience=True`` (degradation ladder, admission control, finite
+guard) -- with sessions compiled outside the clock, and fails (exit 1)
+when the resilient/baseline wall ratio exceeds ``--max-overhead``
+(default 1.05, the documented <=5% bound). The healthy-path invariant
+is asserted, not assumed: the resilient server must finish with its
+fallback and shed counters at ZERO and every request converged -- the
+overhead being measured is pure bookkeeping, not degraded execution.
+
+Rows append to BENCH_serving.json. CI runs this as part of the
+`resilience-chaos-smoke` job:
+
+  BENCH_FAST=1 PYTHONPATH=src:. python -m benchmarks.bench_serving \
+      --max-overhead 1.05
+"""
+from __future__ import annotations
+
+import argparse
+import os
+import time
+
+import numpy as np
+
+from benchmarks.common import RESULTS, emit, write_json
+from repro.api import ExecutionPlan
+from repro.graphs import make_power_law
+from repro.launch.serve_graph import GraphServer
+
+
+def _stream(n_vertices: int, algos, n_requests: int, seed: int):
+    rng = np.random.default_rng(seed)
+    return [(algos[int(rng.integers(len(algos)))],
+             int(rng.integers(n_vertices)))
+            for _ in range(n_requests)]
+
+
+def _serve_wall(srv: GraphServer, stream, repeats: int) -> float:
+    """Median wall of serving the whole stream (sessions warm)."""
+    walls = []
+    for _ in range(repeats):
+        t0 = time.perf_counter()
+        for algo, src in stream:
+            srv.submit(algo, src)
+        srv.drain()
+        walls.append(time.perf_counter() - t0)
+    return float(np.median(walls))
+
+
+def run(max_overhead: float = 1.05) -> float:
+    fast = bool(os.environ.get("BENCH_FAST"))
+    n, m = (512, 2048) if fast else (2048, 8192)
+    n_req = 64 if fast else 256
+    repeats = 5 if fast else 9
+    batch = 8
+    algos = ["bfs", "sssp"]
+    g = make_power_law(n, m, seed=0)
+    stream = _stream(n, algos, n_req, seed=1)
+    plan = ExecutionPlan(mode="data", batch=batch)
+
+    servers = {
+        "baseline": GraphServer(g, plan=plan, resilience=False),
+        "resilient": GraphServer(g, plan=plan, resilience=True,
+                                 max_queue_depth=4 * batch),
+    }
+    walls = {}
+    for label, srv in servers.items():
+        for a in algos:
+            srv.session(a)              # compile outside the clock
+        _serve_wall(srv, stream, 1)     # warm every dispatch signature
+        walls[label] = _serve_wall(srv, stream, repeats)
+        emit(f"serving_{label}_us_per_req", walls[label] * 1e6 / n_req,
+             f"steady-state, |V|={n} |E|={g.m} B={batch} "
+             f"{n_req} reqs over {algos}")
+
+    # healthy-path invariant: the resilient run must not have degraded,
+    # shed, or failed anything -- its extra wall is pure bookkeeping
+    st = servers["resilient"].stats()
+    assert st["resilience"]["fallbacks"] == 0, st["resilience"]
+    assert st["resilience"]["shed"] == 0, st["resilience"]
+    assert st["failed"] == 0 and servers["resilient"].shed == 0
+    emit("serving_resilient_fallbacks", st["resilience"]["fallbacks"],
+         "must be 0 on the healthy path")
+    emit("serving_resilient_shed", st["resilience"]["shed"],
+         "must be 0 on the healthy path")
+
+    ratio = walls["resilient"] / walls["baseline"]
+    emit("serving_resilience_overhead_ratio", ratio,
+         f"resilient/baseline steady-state wall "
+         f"(guard <= {max_overhead:.2f})")
+    return ratio
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--max-overhead", type=float, default=1.05,
+                    help="fail when the resilient/baseline steady-state "
+                         "serving wall exceeds this ratio")
+    args = ap.parse_args()
+    start = len(RESULTS)
+    ratio = None
+    try:
+        ratio = run(args.max_overhead)
+    finally:
+        write_json("serving", rows=RESULTS[start:])
+    print(f"[bench] serving resilience overhead {ratio:.3f}x "
+          f"(bound {args.max_overhead:.2f}x)")
+    if ratio > args.max_overhead:
+        raise SystemExit(
+            f"serving resilience overhead {ratio:.3f}x exceeds the "
+            f"{args.max_overhead:.2f}x bound")
+
+
+if __name__ == "__main__":
+    main()

@@ -27,7 +27,8 @@ import traceback
 def main() -> None:
     from benchmarks import (bench_speedup, bench_parallelism,
                             bench_scaling, bench_compile_time,
-                            bench_mapping_quality, bench_kernels)
+                            bench_mapping_quality, bench_kernels,
+                            bench_serving)
     fast = bool(os.environ.get("BENCH_FAST"))
     calls = [
         (bench_speedup, dict(graphs_per_group=1, sources_per_graph=1,
@@ -41,6 +42,9 @@ def main() -> None:
         (bench_mapping_quality, dict(graphs_per_group=1, sources=1)
             if fast else {}),
         (bench_kernels, {}),
+        # overhead gate disabled here (inf): the aggregate run records
+        # the ratio; the dedicated CI job enforces the <=1.05 bound
+        (bench_serving, dict(max_overhead=float("inf"))),
     ]
     for m, kw in calls:
         try:

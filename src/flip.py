@@ -9,11 +9,15 @@ A thin alias of `repro.api` so user code reads like the paper: compile
 a (graph, program, plan) triple once, then query the session. See
 docs/API.md for the full reference and the legacy->new migration table.
 """
-from repro.api import (CompiledQuery, ExecutionPlan, Program, QueryResult,
+from repro.api import (BackendFailure, CapacityExceeded, CompiledQuery,
+                       ConvergenceFailure, DeadlineExceeded, ExecutionPlan,
+                       FlipError, InvalidRequest, Program, QueryResult,
                        WarmStart, compile, plan_from_cli,
                        resolve_cli_engine)
 
 __all__ = [
     "ExecutionPlan", "Program", "CompiledQuery", "QueryResult",
     "WarmStart", "compile", "plan_from_cli", "resolve_cli_engine",
+    "FlipError", "InvalidRequest", "CapacityExceeded",
+    "DeadlineExceeded", "ConvergenceFailure", "BackendFailure",
 ]

@@ -20,9 +20,14 @@ from repro.api.program import Program
 from repro.api.session import CompiledQuery, QueryResult, compile
 from repro.core.engine import WarmStart
 from repro.obs.telemetry import DispatchTelemetry, QueryTelemetry
+from repro.resilience.errors import (BackendFailure, CapacityExceeded,
+                                     ConvergenceFailure, DeadlineExceeded,
+                                     FlipError, InvalidRequest)
 
 __all__ = [
     "ExecutionPlan", "Program", "CompiledQuery", "QueryResult",
     "WarmStart", "compile", "plan_from_cli", "resolve_cli_engine",
     "QueryTelemetry", "DispatchTelemetry",
+    "FlipError", "InvalidRequest", "CapacityExceeded",
+    "DeadlineExceeded", "ConvergenceFailure", "BackendFailure",
 ]

@@ -64,6 +64,11 @@ class ExecutionPlan:
                    only run at its native width -- `resolve()` rejects
                    mismatches.
     max_steps   -- fixpoint safety valve.
+    deadline_s  -- default per-request wall-clock budget in seconds
+                   (None = unbounded). `query(deadline_s=...)` overrides
+                   per call; queries it stops come back as flagged
+                   partials (`deadline_expired`), never silent
+                   truncations. Not supported on distributed plans.
     """
 
     mode: str = "data"
@@ -77,6 +82,7 @@ class ExecutionPlan:
     warm: str = "auto"
     feature_dim: int = 0         # 0 = auto (the program's native width)
     max_steps: int = 100_000
+    deadline_s: float | None = None
 
     # -------------------------------------------------------------- #
     @classmethod
@@ -130,6 +136,18 @@ class ExecutionPlan:
         if self.max_steps < 1:
             raise ValueError(
                 f"plan.max_steps must be >= 1, got {self.max_steps}")
+        if self.deadline_s is not None and not (
+                isinstance(self.deadline_s, (int, float))
+                and self.deadline_s > 0):
+            raise ValueError(
+                f"plan.deadline_s must be None or a positive number of "
+                f"seconds, got {self.deadline_s!r}")
+        if self.deadline_s is not None and (
+                self.distributed or self.mesh is not None):
+            raise ValueError(
+                "plan.deadline_s is not supported on distributed plans: "
+                "the shard_map fixpoint has no host-observable step "
+                "boundary to enforce it at -- use max_steps")
         if algebra is not None and self.warm == "always" \
                 and algebra.kind != "monotone":
             raise ValueError(
@@ -171,7 +189,7 @@ class ExecutionPlan:
                 self.batch, self.distributed,
                 None if self.mesh is None else id(self.mesh),
                 self.mesh_axis, self.warm, self.feature_dim,
-                self.max_steps)
+                self.max_steps, self.deadline_s)
 
 
 # ------------------------------------------------------------------ #

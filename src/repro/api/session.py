@@ -31,6 +31,7 @@ from repro.core.engine import FlipEngine, WarmStart
 from repro.graphs.csr import Graph
 from repro.kernels.frontier.ops import UpdateDelta
 from repro.obs.telemetry import QueryTelemetry
+from repro.resilience.errors import ConvergenceFailure, InvalidRequest
 
 
 @dataclasses.dataclass
@@ -48,7 +49,14 @@ class QueryResult:
     latency accounting (server histograms, benches) reads
     ``wall_s - compile_s`` and is never polluted by the first query's
     trace cost. `telemetry` is set iff the query ran with ``trace=``:
-    per-dispatch, per-step frontier records (see `repro.obs`)."""
+    per-dispatch, per-step frontier records (see `repro.obs`).
+
+    `converged` (bool, or (B,) to match `srcs`) is the engine's
+    per-query convergence mask: False means this query's fixpoint was
+    stopped early -- by a `max_steps` / `deadline_s` budget or by the
+    session-wide `plan.max_steps` valve -- and its attrs row is a
+    flagged partial relaxation, not the fixpoint. `deadline_expired`
+    marks which of those stops were the deadline's."""
 
     attrs: np.ndarray
     steps: int | np.ndarray
@@ -60,14 +68,36 @@ class QueryResult:
     dispatches: int = 1
     compile_s: float = 0.0
     telemetry: QueryTelemetry | None = None
+    converged: bool | np.ndarray = True
+    deadline_expired: bool | np.ndarray = False
 
     @property
     def batched(self) -> bool:
         return bool(np.ndim(self.srcs))
 
+    @property
+    def all_converged(self) -> bool:
+        return bool(np.all(self.converged))
+
     def check(self) -> bool:
         """Verify every row against the program's numpy oracle at the
-        algebra's tolerance."""
+        algebra's tolerance. Fails loudly -- raises
+        `ConvergenceFailure` -- if any query hit its step/deadline
+        budget or `plan.max_steps`: a truncated fixpoint cannot be
+        oracle-checked, and silently returning False would let callers
+        mistake "not converged" for "wrong answer" (or worse, never
+        notice a `max_steps` valve firing)."""
+        if not self.all_converged:
+            conv = np.atleast_1d(np.asarray(self.converged))
+            bad = np.flatnonzero(~conv)
+            raise ConvergenceFailure(
+                f"cannot oracle-check a non-converged result: "
+                f"quer{'y' if bad.size == 1 else 'ies'} "
+                f"{bad.tolist()} stopped at "
+                f"{np.atleast_1d(np.asarray(self.steps))[bad].tolist()} "
+                "steps with a non-empty frontier (step/deadline budget "
+                f"or plan.max_steps={self.plan.max_steps} hit)",
+                steps=self.steps, max_steps=self.plan.max_steps)
         if not self.batched:
             return self.program.check(self.graph, int(self.srcs),
                                       self.attrs)
@@ -94,8 +124,8 @@ class CompiledQuery:
     _dispatched: set = dataclasses.field(default_factory=set, repr=False)
 
     # -------------------------------------------------------------- #
-    def query(self, srcs, *, warm=None, trace: bool | int = False) \
-            -> QueryResult:
+    def query(self, srcs, *, warm=None, trace: bool | int = False,
+              max_steps=None, deadline_s=None) -> QueryResult:
         """Run the program from `srcs` under the session's plan.
 
         srcs  -- one source vertex (scalar result shapes) or a sequence
@@ -104,6 +134,9 @@ class CompiledQuery:
                  fixed-size buckets of B (every dispatch reuses one
                  compiled executable -- the serving policy); with
                  plan.batch = 0 the whole sequence is one fixpoint.
+                 Sources are range-checked here: an out-of-range id
+                 raises `InvalidRequest` naming the bad value instead
+                 of poisoning a batch with garbage gather indices.
         warm  -- resume from a prior converged result: a `QueryResult`
                  for the same sources on the pre-update session (the
                  session's last `update` delta decides soundness under
@@ -113,17 +146,42 @@ class CompiledQuery:
                  holds one `DispatchTelemetry` per engine dispatch.
                  Tracing is exact: attrs and steps are bit-identical to
                  the untraced run.
+        max_steps  -- per-request step budget (int, or one per source),
+                 clipped to plan.max_steps. A query stopped by it comes
+                 back as a partial result with ``converged`` False --
+                 never a silent truncation.
+        deadline_s -- per-request wall-clock budget in seconds from this
+                 call (float, or one per source; default
+                 plan.deadline_s), enforced at host-observable fixpoint
+                 step boundaries; `deadline_expired` marks queries it
+                 stopped. Not supported on distributed plans.
 
         Every combination returns bit-for-bit the attrs a plain scratch
-        scalar run would produce.
+        scalar run would produce (budget-stopped queries excepted: they
+        are flagged partials).
         """
         t0 = time.perf_counter()
         if trace and self.plan.distributed:
             raise ValueError(
                 "query(trace=...) is not supported on a distributed "
                 "plan yet; trace on a local plan")
+        self._validate_srcs(srcs)
+        if deadline_s is None:
+            deadline_s = self.plan.deadline_s
         batched = bool(np.ndim(srcs))
-        if batched and len(np.atleast_1d(srcs)) == 0:
+        b = len(np.atleast_1d(srcs)) if batched else 1
+        budgets = self._per_query(max_steps, b, "max_steps",
+                                  dtype=np.int64, minimum=1,
+                                  none_fill=self.plan.max_steps)
+        # deadlines become absolute at the query's start, so a bucketed
+        # query's later chunks see the *remaining* budget, not a fresh one
+        rel = self._per_query(deadline_s, b, "deadline_s",
+                              dtype=np.float64, minimum=0.0,
+                              exclusive=True)
+        deadline_abs = (None if rel is None
+                        else time.monotonic() + np.where(
+                            np.isnan(rel), np.inf, rel))
+        if batched and b == 0:
             # degenerate empty batch: well-formed empty shapes (the
             # tiled engine state cannot represent B=0)
             d = self.plan.feature_dim
@@ -134,25 +192,30 @@ class CompiledQuery:
                 srcs=np.zeros(0, dtype=np.int64), plan=self.plan,
                 program=self.program, graph=self.graph,
                 wall_s=time.perf_counter() - t0, dispatches=0,
+                converged=np.ones(0, dtype=bool),
+                deadline_expired=np.zeros(0, dtype=bool),
                 telemetry=QueryTelemetry([]) if trace else None)
         ws = self._resolve_warm(warm, srcs)
         teles: list = []
         compile_s = 0.0
         if not batched or self.plan.batch == 0:
-            out, steps, tele, wall, first = self._dispatch(srcs, ws, trace)
+            det, wall, first = self._dispatch(srcs, ws, trace, budgets,
+                                              deadline_abs)
+            out, steps = det.attrs, det.steps
+            conv, expired = det.converged, det.deadline_expired
             dispatches = 1
             compile_s = wall if first else 0.0
-            if tele is not None:
-                teles.append(tele)
+            if det.telemetry is not None:
+                teles.append(det.telemetry)
         else:
             # every batched query pads to fixed-size buckets of
             # plan.batch -- a short sequence too, so each dispatch
             # reuses one (B, ntiles, T) executable regardless of the
             # caller's tail size
-            out, steps, dispatches, teles, compile_s = \
+            (out, steps, conv, expired, dispatches, teles, compile_s) = \
                 self._query_bucketed(
                     np.atleast_1d(np.asarray(srcs, dtype=np.int64)),
-                    ws, trace)
+                    ws, trace, budgets, deadline_abs)
         wall_s = time.perf_counter() - t0
         telemetry = None
         if trace:
@@ -164,52 +227,128 @@ class CompiledQuery:
                            plan=self.plan, program=self.program,
                            graph=self.graph, wall_s=wall_s,
                            dispatches=dispatches, compile_s=compile_s,
+                           converged=conv, deadline_expired=expired,
                            telemetry=telemetry)
 
-    def _dispatch(self, srcs, ws, trace):
+    def _validate_srcs(self, srcs) -> None:
+        """Source range check: every id must be a vertex of this graph.
+        Rejecting here -- with the bad value named -- beats the
+        alternatives: a negative id silently gathers from the end of
+        the attr arrays (garbage results), an id >= n raises an opaque
+        index error deep inside a jit trace."""
+        a = np.atleast_1d(np.asarray(srcs))
+        if a.size == 0:
+            return
+        if not np.issubdtype(a.dtype, np.integer):
+            cast = a.astype(np.int64, casting="unsafe")
+            if not np.array_equal(cast, a):
+                raise InvalidRequest(
+                    f"sources must be integer vertex ids, got dtype "
+                    f"{a.dtype}", value=srcs)
+            a = cast
+        bad = (a < 0) | (a >= self.graph.n)
+        if bad.any():
+            v = int(a[bad][0])
+            raise InvalidRequest(
+                f"source {v} is out of range for this graph "
+                f"(|V| = {self.graph.n}; valid ids are 0.."
+                f"{self.graph.n - 1})", value=v)
+
+    @staticmethod
+    def _per_query(val, b: int, name: str, dtype, minimum,
+                   exclusive: bool = False, none_fill=np.nan):
+        """Broadcast a scalar-or-per-source budget to (b,), validating
+        type and range. None entries mean "this query takes the
+        default" and become `none_fill` (NaN -> no deadline for floats,
+        plan.max_steps for step budgets)."""
+        if val is None:
+            return None
+        arr = np.atleast_1d(np.asarray(
+            [none_fill if v is None else v for v in np.atleast_1d(val)]))
+        raw = arr
+        try:
+            arr = arr.astype(dtype)
+        except (TypeError, ValueError):
+            raise InvalidRequest(
+                f"{name} must be numeric, got {val!r}", value=val)
+        if np.issubdtype(dtype, np.integer) and not np.array_equal(
+                arr.astype(np.float64), raw.astype(np.float64)):
+            raise InvalidRequest(
+                f"{name} must be whole numbers, got {val!r}", value=val)
+        if arr.shape not in ((1,), (b,)):
+            raise InvalidRequest(
+                f"{name} has {arr.shape[0]} entries for {b} sources "
+                "(pass a scalar or one per source)", value=val)
+        finite = arr[~np.isnan(arr.astype(np.float64))]
+        low = (finite <= minimum) if exclusive else (finite < minimum)
+        if low.any():
+            raise InvalidRequest(
+                f"{name} must be {'>' if exclusive else '>='} "
+                f"{minimum}, got {finite[low][0]}", value=val)
+        return np.broadcast_to(arr, (b,))
+
+    def _dispatch(self, srcs, ws, trace, budgets=None, deadline_abs=None):
         """One engine dispatch with compile-time attribution: returns
-        ``(out, steps, DispatchTelemetry | None, wall_s, first)`` where
-        `first` marks the first dispatch of this signature (its wall
-        includes the one-time jit trace)."""
+        ``(ExecutionDetail, wall_s, first)`` where `first` marks the
+        first dispatch of this signature (its wall includes the
+        one-time jit trace)."""
         # tracing rides extra stat buffers through the fixpoint carry,
         # so traced and untraced runs are distinct executables
         sig = ("solo" if not np.ndim(srcs) else len(srcs),
                self.plan.distributed, bool(trace))
         first = sig not in self._dispatched
+        remaining = (None if deadline_abs is None
+                     else np.asarray(deadline_abs) - time.monotonic())
         t0 = time.perf_counter()
-        r = self.engine.execute(
+        det = self.engine.execute(
             srcs, warm=ws, distributed=self.plan.distributed,
-            mesh=self.plan.mesh, axis=self.plan.mesh_axis, trace=trace)
+            mesh=self.plan.mesh, axis=self.plan.mesh_axis, trace=trace,
+            max_steps=budgets, deadline_s=remaining, detail=True)
         wall = time.perf_counter() - t0
         self._dispatched.add(sig)
-        out, steps = r[0], r[1]
-        tele = r[2] if trace else None
-        if tele is not None:
-            tele.wall_s = wall
-        return out, steps, tele, wall, first
+        if det.telemetry is not None:
+            det.telemetry.wall_s = wall
+        return det, wall, first
 
-    def _query_bucketed(self, srcs, ws, trace):
+    def _query_bucketed(self, srcs, ws, trace, budgets=None,
+                        deadline_abs=None):
         """plan.batch-sized dispatch: pad the tail bucket by repeating
-        its last source so every dispatch shares one (B, ntiles, T)
-        executable, then drop the padded rows."""
+        its last source (budgets and deadlines pad along with it) so
+        every dispatch shares one (B, ntiles, T) executable, then drop
+        the padded rows."""
         nb = self.plan.batch
-        outs, steps, dispatches, teles = [], [], 0, []
+        outs, steps, convs, exps = [], [], [], []
+        dispatches, teles = 0, []
         compile_s = 0.0
+
+        def pad(arr, i, k):
+            if arr is None:
+                return None
+            chunk = np.asarray(arr)[i:i + k]
+            return np.concatenate(
+                [chunk, np.repeat(chunk[-1:], nb - k)])
+
         for i in range(0, len(srcs), nb):
             chunk = srcs[i:i + nb]
+            k = len(chunk)
             padded = np.concatenate(
-                [chunk, np.repeat(chunk[-1:], nb - len(chunk))])
-            w = self._slice_warm(ws, i, len(chunk), nb)
-            o, s, tele, wall, first = self._dispatch(padded, w, trace)
+                [chunk, np.repeat(chunk[-1:], nb - k)])
+            w = self._slice_warm(ws, i, k, nb)
+            det, wall, first = self._dispatch(
+                padded, w, trace, pad(budgets, i, k),
+                pad(deadline_abs, i, k))
             if first:
                 compile_s += wall
-            if tele is not None:
-                teles.append(tele)
-            outs.append(o[:len(chunk)])
-            steps.append(s[:len(chunk)])
+            if det.telemetry is not None:
+                teles.append(det.telemetry)
+            outs.append(det.attrs[:k])
+            steps.append(det.steps[:k])
+            convs.append(np.atleast_1d(det.converged)[:k])
+            exps.append(np.atleast_1d(det.deadline_expired)[:k])
             dispatches += 1
-        return (np.concatenate(outs), np.concatenate(steps), dispatches,
-                teles, compile_s)
+        return (np.concatenate(outs), np.concatenate(steps),
+                np.concatenate(convs), np.concatenate(exps),
+                dispatches, teles, compile_s)
 
     def _slice_warm(self, ws, i, k, nb):
         """Per-bucket view of a warm start: batch-shared warm attrs

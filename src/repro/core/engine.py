@@ -68,6 +68,7 @@ from repro.kernels.frontier.ops import (BlockedGraph, UpdateDelta,
                                         build_blocks, frontier_relax,
                                         resolve_relax_mode, tile_activity)
 from repro.obs.telemetry import DispatchTelemetry, StepTrace
+from repro.resilience.errors import InvalidRequest
 
 # default per-step trace row capacity (`execute(trace=True)`): enough for
 # any realistic fixpoint (diameters are O(100) even on road networks)
@@ -93,6 +94,26 @@ class WarmStart:
     """
     attrs: np.ndarray
     seeds: np.ndarray
+
+
+@dataclasses.dataclass
+class ExecutionDetail:
+    """Everything one `execute(detail=True)` dispatch knows about its
+    outcome, beyond the bare ``(out, steps)`` tuple:
+
+    `converged` is the engine's per-query convergence mask read at the
+    fixpoint's end: True iff that query's frontier emptied (the fixpoint
+    was *reached*), False iff it was frozen by a step budget, a
+    deadline, or the session-wide `max_steps` valve -- in which case
+    `attrs` is a valid partial relaxation, flagged, never silently
+    truncated. `deadline_expired` marks which queries the deadline (not
+    the step budget) stopped. Shapes follow the query: scalar source ->
+    scalar flags, batch -> (B,) arrays."""
+    attrs: np.ndarray
+    steps: int | np.ndarray
+    converged: bool | np.ndarray
+    deadline_expired: bool | np.ndarray
+    telemetry: DispatchTelemetry | None = None
 
 
 def mapping_order(mapping: Mapping) -> np.ndarray:
@@ -258,10 +279,14 @@ class FlipEngine:
 
     def _masked_step(self, attrs, aux, frontier, live,
                      with_stats: bool = False):
-        """One relax step with the per-query convergence freeze applied:
-        queries whose frontier emptied (`live` (B,) bool) keep their
-        state untouched. The single body behind both fixpoint drivers,
-        so host-driven and while_loop runs stay bit-for-bit identical."""
+        """One relax step with the per-query freeze applied: queries not
+        in `live` ((B,) bool -- frontier emptied, or step/deadline budget
+        exhausted) keep their state *and their frontier* untouched, so a
+        budget-frozen query still reads as non-converged (frontier
+        non-empty) while a finished one stays finished (its frontier
+        emptied naturally). The single body behind both fixpoint
+        drivers, so host-driven and while_loop runs stay bit-for-bit
+        identical."""
         stepped = self._step(attrs, aux, frontier, with_stats=with_stats)
         (attrs_n, aux_n, frontier_n), stats = \
             stepped if with_stats else (stepped, None)
@@ -270,42 +295,70 @@ class FlipEngine:
         ms = live.reshape(live.shape + (1,) * (attrs.ndim - 1))
         out = (jnp.where(ms, attrs_n, attrs),
                jnp.where(ms, aux_n, aux),
-               jnp.logical_and(frontier_n, live[:, None, None]))
+               jnp.where(live[:, None, None], frontier_n, frontier))
         return (out, stats) if with_stats else out
 
-    def _fixpoint(self, attrs0, aux0, frontier0, trace_cap: int = 0):
+    def _fixpoint(self, attrs0, aux0, frontier0, trace_cap: int = 0,
+                  budgets=None, deadlines_t=None):
         """Shared (B, ntiles, T) while_loop with per-query convergence
         masking: a query whose frontier emptied is frozen, so late
         queries in the batch cannot perturb finished ones (op-mode
         sweeps and residual aux accumulation would otherwise keep
         touching them) and per-query step counts match solo runs.
 
-        Compacted jnp streaming needs concrete frontiers (the active
-        block count picks the bucket size), which a traced while_loop
-        cannot provide -- that combination drives the same body from the
-        host instead.
+        `budgets` ((B,) i32, default: `max_steps` everywhere) is the
+        per-query step cap: a query that reaches its budget with a
+        non-empty frontier is frozen exactly like a converged one but
+        keeps its frontier, so the final per-query convergence mask
+        (returned as the 5th element) reads False for it -- a partial
+        result is always *flagged*, never silently truncated. Budgets
+        are a traced argument of the one compiled while_loop, so
+        varying them never retraces.
+
+        `deadlines_t` ((B,) absolute `time.monotonic` deadlines, +inf =
+        none) needs host-observable step boundaries, so any finite
+        deadline routes the fixpoint through the host driver (same
+        body, bit-for-bit results). Compacted jnp streaming routes
+        there too (concrete frontiers pick the bucket sizes).
 
         `trace_cap > 0` additionally records one per-step stats row into
         fixed-shape (trace_cap, ...) buffers riding the carry (see
-        `_step_stats`); returns ``(attrs, aux, steps, trace)`` where
-        `trace` is a `(StepTrace, truncated)` pair, or None when
-        tracing is off. The stat buffers are write-only extra outputs,
-        so attrs and step counts are bit-identical either way."""
-        if self._use_compact and self._resolved_relax_mode() == "jnp":
-            return self._fixpoint_host(attrs0, aux0, frontier0, trace_cap)
-        out = self._dense_fixpoint_jit(trace_cap)(attrs0, aux0, frontier0)
-        attrs, aux, steps = out[0], out[1], out[3]
+        `_step_stats`). Returns ``(attrs, aux, steps, trace, converged,
+        expired)`` where `trace` is a `(StepTrace, truncated)` pair or
+        None, `converged` is the (B,) bool end-of-run mask, and
+        `expired` marks deadline-stopped queries. The stat buffers are
+        write-only extra outputs, so attrs and step counts are
+        bit-identical either way."""
+        b = attrs0.shape[0]
+        if budgets is None:
+            budgets = jnp.full((b,), self.max_steps, dtype=jnp.int32)
+        else:
+            budgets = jnp.asarray(np.broadcast_to(
+                np.asarray(budgets, dtype=np.int32), (b,)))
+        deadlined = (deadlines_t is not None
+                     and bool(np.isfinite(deadlines_t).any()))
+        if deadlined or (self._use_compact
+                         and self._resolved_relax_mode() == "jnp"):
+            return self._fixpoint_host(attrs0, aux0, frontier0, trace_cap,
+                                       budgets=budgets,
+                                       deadlines_t=deadlines_t)
+        out = self._dense_fixpoint_jit(trace_cap)(attrs0, aux0, frontier0,
+                                                  budgets)
+        attrs, aux, frontier, steps = out[0], out[1], out[2], out[3]
+        converged = ~np.asarray(frontier.any(axis=(1, 2)))
+        expired = np.zeros(b, dtype=bool)
         if not trace_cap:
-            return attrs, aux, steps, None
-        n_iter = int(out[4])
+            return attrs, aux, steps, None, converged, expired
+        n_iter = int(out[5])
         rows = min(n_iter, trace_cap)
-        b_av, b_at, b_bf, b_cv = (np.asarray(x)[:rows] for x in out[5])
+        b_av, b_at, b_bf, b_cv = (np.asarray(x)[:rows] for x in out[6])
         nb = int(self.bg.bsrc.shape[0])
         trace = StepTrace(active_vertices=b_av, active_tiles=b_at,
                           blocks_fetched=b_bf,
                           blocks_skipped=np.int32(nb) - b_bf,
                           converged=b_cv)
-        return attrs, aux, steps, (trace, n_iter > trace_cap)
+        return (attrs, aux, steps, (trace, n_iter > trace_cap),
+                converged, expired)
 
     def _dense_fixpoint_jit(self, trace_cap: int):
         """The whole dense while_loop compiled as ONE jitted program per
@@ -319,19 +372,27 @@ class FlipEngine:
         if fn is not None:
             return fn
 
+        def live_mask(frontier, steps, budgets):
+            """(B,) per-query liveness: frontier still active AND the
+            step budget not yet exhausted. Budget-capped queries drop
+            out of the loop but keep their (non-empty) frontier, which
+            is exactly how the final convergence mask spots them."""
+            return jnp.logical_and(frontier.any(axis=(1, 2)),
+                                   steps < budgets)
+
         def cond(state):
-            frontier, steps = state[2], state[3]
-            return jnp.logical_and(frontier.any(),
-                                   steps.max() < self.max_steps)
+            frontier, steps, budgets = state[2], state[3], state[4]
+            return live_mask(frontier, steps, budgets).any()
 
         def body(state):
-            attrs, aux, frontier, steps = state[:4]
-            live = frontier.any(axis=(1, 2))          # (B,) per query
+            attrs, aux, frontier, steps, budgets = state[:5]
+            live = live_mask(frontier, steps, budgets)
             if not trace_cap:
                 attrs, aux, frontier = self._masked_step(attrs, aux,
                                                          frontier, live)
-                return attrs, aux, frontier, steps + live.astype(jnp.int32)
-            it, (b_av, b_at, b_bf, b_cv) = state[4], state[5]
+                return (attrs, aux, frontier,
+                        steps + live.astype(jnp.int32), budgets)
+            it, (b_av, b_at, b_bf, b_cv) = state[5], state[6]
             (attrs, aux, frontier), (av, at, bf) = self._masked_step(
                 attrs, aux, frontier, live, with_stats=True)
             # rows past the capacity are dropped, not wrapped: the trace
@@ -341,12 +402,13 @@ class FlipEngine:
                     b_bf.at[it].set(bf, mode="drop"),
                     b_cv.at[it].set(~live, mode="drop"))
             return (attrs, aux, frontier, steps + live.astype(jnp.int32),
-                    it + 1, bufs)
+                    budgets, it + 1, bufs)
 
         @jax.jit
-        def run(attrs0, aux0, frontier0):
+        def run(attrs0, aux0, frontier0, budgets):
             b = attrs0.shape[0]
-            state0 = (attrs0, aux0, frontier0, jnp.zeros(b, jnp.int32))
+            state0 = (attrs0, aux0, frontier0, jnp.zeros(b, jnp.int32),
+                      budgets)
             if trace_cap:
                 bufs0 = (jnp.zeros((trace_cap, b), jnp.int32),
                          jnp.zeros((trace_cap,), jnp.int32),
@@ -358,19 +420,34 @@ class FlipEngine:
         cache[trace_cap] = run
         return run
 
-    def _fixpoint_host(self, attrs, aux, frontier, trace_cap: int = 0):
-        """Host-driven fixpoint for compacted jnp streaming: identical
-        body semantics to the while_loop above (same live-mask freezing,
-        same step accounting -- bit-for-bit results), but each step reads
-        the concrete frontier so `frontier_relax` can bucket the
-        compacted block list and the step cost follows the live frontier
-        instead of the full block count.
+    def _fixpoint_host(self, attrs, aux, frontier, trace_cap: int = 0,
+                       budgets=None, deadlines_t=None):
+        """Host-driven fixpoint for compacted jnp streaming and for
+        deadline-budgeted queries: identical body semantics to the
+        while_loop above (same live-mask freezing, same step accounting
+        -- bit-for-bit results), but each step reads the concrete
+        frontier so `frontier_relax` can bucket the compacted block list
+        -- and, because every step boundary is host-observable, this is
+        where per-query deadlines are enforced: a query whose
+        `deadlines_t` entry has passed is frozen (kept frontier, so it
+        reads non-converged) before the next step starts; work already
+        done is returned as a flagged partial result.
 
         With `trace_cap`, stats rows are recorded host-side -- and since
         this loop observes every step from the host anyway, it also
         records real per-step wall times (`StepTrace.step_wall_s`),
         which the on-device while_loop cannot."""
-        steps = np.zeros(attrs.shape[0], np.int32)
+        b = int(attrs.shape[0])
+        if budgets is None:
+            budgets = np.full(b, self.max_steps, dtype=np.int32)
+        budgets = np.asarray(budgets)
+        deadlines = (None if deadlines_t is None
+                     or not np.isfinite(deadlines_t).any()
+                     else np.broadcast_to(np.asarray(deadlines_t,
+                                                     dtype=np.float64),
+                                          (b,)))
+        expired = np.zeros(b, dtype=bool)
+        steps = np.zeros(b, np.int32)
         rows: list[tuple] = []
         walls: list[float] = []
         n_iter = 0
@@ -379,10 +456,15 @@ class FlipEngine:
             # this concrete read is the loop's natural per-step sync: it
             # also closes the previous traced step's wall measurement, so
             # tracing adds no extra host<->device round trips
-            live = np.asarray(frontier.any(axis=(1, 2)))
+            active = np.asarray(frontier.any(axis=(1, 2)))
             if len(walls) < len(rows):
                 walls.append(time.perf_counter() - t0)
-            if not live.any() or int(steps.max()) >= self.max_steps:
+            if deadlines is not None:
+                # a deadline only *expires* a query that still has work
+                # left: converged queries met their deadline by definition
+                expired |= active & (deadlines <= time.monotonic())
+            live = active & ~expired & (steps < budgets)
+            if not live.any():
                 break
             t0 = time.perf_counter()
             if trace_cap:
@@ -399,9 +481,10 @@ class FlipEngine:
                     attrs, aux, frontier, jnp.asarray(live))
             steps = steps + live.astype(np.int32)
             n_iter += 1
+        converged = ~np.asarray(frontier.any(axis=(1, 2)))
         if not trace_cap:
-            return attrs, aux, jnp.asarray(steps), None
-        b = int(attrs.shape[0])
+            return (attrs, aux, jnp.asarray(steps), None, converged,
+                    expired)
         nb = int(self.bg.bsrc.shape[0])
         bf = np.asarray([int(r[2]) for r in rows], dtype=np.int32)
         trace = StepTrace(
@@ -415,14 +498,16 @@ class FlipEngine:
             converged=(np.stack([r[3] for r in rows]) if rows
                        else np.zeros((0, b), bool)),
             step_wall_s=np.asarray(walls, dtype=np.float64))
-        return attrs, aux, jnp.asarray(steps), (trace, n_iter > trace_cap)
+        return (attrs, aux, jnp.asarray(steps),
+                (trace, n_iter > trace_cap), converged, expired)
 
     # -------------------------------------------------------------- #
     # the one plan-driven executor
     # -------------------------------------------------------------- #
     def execute(self, srcs, *, warm: WarmStart | None = None,
                 distributed: bool = False, mesh: Mesh | None = None,
-                axis: str = "data", trace: bool | int = False):
+                axis: str = "data", trace: bool | int = False,
+                max_steps=None, deadline_s=None, detail: bool = False):
         """The single execution entry point every layer drives.
 
         One call uniformly covers what used to be four methods: a scalar
@@ -442,26 +527,103 @@ class FlipEngine:
         bit-identical with tracing on. Tracing the shard_map fixpoint is
         not supported yet.
 
+        `max_steps` (int or (B,) per-query ints) caps each query's
+        relaxation steps below the session-wide `self.max_steps` valve;
+        `deadline_s` (relative seconds, scalar or (B,) per query) stops
+        a query at the first host-observable step boundary past its
+        deadline. Either budget can leave a query short of its fixpoint
+        -- the partial result is *flagged* via the per-query convergence
+        mask, which `detail=True` exposes: the call then returns an
+        `ExecutionDetail` (attrs / steps / converged / deadline_expired
+        / telemetry) instead of the bare tuple. Deadlines are a local
+        (host-driven) mechanism; a distributed plan rejects them.
+
         `repro.api.CompiledQuery` is the intended driver: it resolves an
         `ExecutionPlan` into these arguments. The legacy `run*` methods
         are deprecated shims over this method.
         """
         batched = bool(np.ndim(srcs))
         srcs = np.atleast_1d(np.asarray(srcs, dtype=np.int64))
+        budgets = self._resolve_budgets(max_steps, len(srcs))
+        deadlines_t = self._resolve_deadlines(deadline_s, len(srcs))
         if distributed:
             if trace:
                 raise ValueError(
                     "per-step tracing is not supported on the "
                     "distributed (shard_map) fixpoint yet; run the "
                     "trace on a local plan")
-            out, steps = self._execute_distributed(srcs, warm=warm,
-                                                   mesh=mesh, axis=axis)
-            tele = None
+            if deadlines_t is not None:
+                raise InvalidRequest(
+                    "deadline_s is not supported on the distributed "
+                    "(shard_map) fixpoint: deadlines are enforced at "
+                    "host-observable step boundaries -- use max_steps, "
+                    "or run on a local plan")
+            out, steps, conv = self._execute_distributed(
+                srcs, warm=warm, mesh=mesh, axis=axis, budgets=budgets)
+            tele, expired = None, np.zeros(len(srcs), dtype=bool)
         else:
-            out, steps, tele = self._execute_local(
-                srcs, warm=warm, trace_cap=self._trace_cap(trace))
+            out, steps, tele, conv, expired = self._execute_local(
+                srcs, warm=warm, trace_cap=self._trace_cap(trace),
+                budgets=budgets, deadlines_t=deadlines_t)
+        if detail:
+            if batched:
+                return ExecutionDetail(attrs=out, steps=steps,
+                                       converged=conv,
+                                       deadline_expired=expired,
+                                       telemetry=tele)
+            return ExecutionDetail(attrs=out[0], steps=int(steps[0]),
+                                   converged=bool(conv[0]),
+                                   deadline_expired=bool(expired[0]),
+                                   telemetry=tele)
         r = (out, steps) if batched else (out[0], int(steps[0]))
         return r + (tele,) if trace else r
+
+    def _resolve_budgets(self, max_steps, b: int):
+        """Per-query step budgets ((B,) i32) from a caller cap: None
+        keeps the session valve; an int or (B,) sequence is validated
+        (>= 1) and clipped to `self.max_steps`."""
+        if max_steps is None:
+            return None
+        budgets = np.atleast_1d(np.asarray(max_steps))
+        if not np.issubdtype(budgets.dtype, np.integer):
+            raise InvalidRequest(
+                f"max_steps must be an int or a sequence of ints, got "
+                f"dtype {budgets.dtype}", value=max_steps)
+        if budgets.shape not in ((1,), (b,)):
+            raise InvalidRequest(
+                f"max_steps shape {budgets.shape} does not match the "
+                f"{b} queries (scalar or one budget per query)",
+                value=max_steps)
+        if (budgets < 1).any():
+            bad = int(budgets[budgets < 1][0])
+            raise InvalidRequest(
+                f"max_steps must be >= 1, got {bad}", value=bad)
+        return np.minimum(
+            np.broadcast_to(budgets, (b,)), self.max_steps
+        ).astype(np.int32)
+
+    def _resolve_deadlines(self, deadline_s, b: int):
+        """Absolute per-query `time.monotonic` deadlines ((B,) f64) from
+        relative seconds (scalar or per query; None / non-finite entries
+        mean no deadline)."""
+        if deadline_s is None:
+            return None
+        now = time.monotonic()
+        rel = np.atleast_1d(np.asarray(
+            [np.inf if d is None else float(d)
+             for d in np.atleast_1d(deadline_s)], dtype=np.float64))
+        if rel.shape not in ((1,), (b,)):
+            raise InvalidRequest(
+                f"deadline_s shape {rel.shape} does not match the "
+                f"{b} queries (scalar or one deadline per query)",
+                value=deadline_s)
+        # rel <= 0 is legal here: a bucketed query's later chunks may
+        # arrive with their deadline already spent -- they come back
+        # immediately as flagged partials (the session validates that
+        # *caller-supplied* deadlines are positive)
+        if not np.isfinite(rel).any():
+            return None
+        return np.broadcast_to(now + rel, (b,)).copy()
 
     def _trace_cap(self, trace: bool | int) -> int:
         """0 (off) or the per-step trace row capacity."""
@@ -481,13 +643,16 @@ class FlipEngine:
         return None
 
     def _execute_local(self, srcs, warm: WarmStart | None = None,
-                       trace_cap: int = 0):
+                       trace_cap: int = 0, budgets=None,
+                       deadlines_t=None):
         """Local fixpoint over a (B,) source array; always batched.
-        Returns ``(out, steps, DispatchTelemetry | None)``."""
+        Returns ``(out, steps, DispatchTelemetry | None, converged,
+        deadline_expired)`` -- the last two are (B,) bool masks."""
         attrs0, aux0, frontier0 = self.initial_state(srcs, warm=warm)
         t0 = time.perf_counter()
-        attrs, aux, steps, rec = self._fixpoint(attrs0, aux0, frontier0,
-                                                trace_cap)
+        attrs, aux, steps, rec, converged, expired = self._fixpoint(
+            attrs0, aux0, frontier0, trace_cap, budgets=budgets,
+            deadlines_t=deadlines_t)
         out = self.bg.to_orig(self.algebra.finalize(attrs, aux),
                               features=self._features)
         steps = np.asarray(steps)
@@ -502,7 +667,7 @@ class FlipEngine:
                 trace=trace, wall_s=time.perf_counter() - t0,
                 truncated=truncated, tile=self.bg.tile,
                 feature_dim=self.feature_dim)
-        return out, steps, tele
+        return out, steps, tele, converged, expired
 
     # -------------------------------------------------------------- #
     # streaming graph mutations: delta-driven incremental recompute
@@ -520,7 +685,8 @@ class FlipEngine:
 
     # -------------------------------------------------------------- #
     def _execute_distributed(self, srcs, warm: WarmStart | None = None,
-                             mesh: Mesh | None = None, axis: str = "data"):
+                             mesh: Mesh | None = None, axis: str = "data",
+                             budgets=None):
         """shard_map fixpoint over a (B,) source array; always batched:
         destination tiles sharded over `axis`, queries replicated.
         `warm` resumes from a prior converged result (see `WarmStart`),
@@ -594,21 +760,27 @@ class FlipEngine:
             frontier0 = jnp.pad(frontier0, ((0, 0), (0, pad), (0, 0)))
         op_mode = self.mode == "op"
         skip_idle = self._use_compact
+        if budgets is None:
+            budgets0 = np.full(srcs.shape[0], self.max_steps,
+                               dtype=np.int32)
+        else:
+            budgets0 = np.asarray(budgets, dtype=np.int32)
 
         @functools.partial(
             shard_map, mesh=mesh,
             in_specs=(P(axis), P(axis), P(axis), P(axis),
-                      P(None), P(None), P(None)),
-            out_specs=(P(None), P(None), P(None)),
+                      P(None), P(None), P(None), P(None)),
+            out_specs=(P(None), P(None), P(None), P(None)),
             check_rep=False)
-        def dist_fix(blocks, bsrc_l, bdst_l, valid_l, attrs, aux, frontier):
+        def dist_fix(blocks, bsrc_l, bdst_l, valid_l, attrs, aux, frontier,
+                     budgets):
             blocks, bsrc_l, bdst_l, valid_l = (blocks[0], bsrc_l[0],
                                                bdst_l[0], valid_l[0])
 
             def cond(state):
                 _, _, frontier, steps = state
-                return jnp.logical_and(frontier.any(),
-                                       steps.max() < self.max_steps)
+                return jnp.logical_and(frontier.any(axis=(1, 2)),
+                                       steps < budgets).any()
 
             def relax_local(args):
                 svb, carry_local = args
@@ -623,7 +795,8 @@ class FlipEngine:
 
             def body(state):
                 attrs, aux, frontier, steps = state
-                live = frontier.any(axis=(1, 2))
+                live = jnp.logical_and(frontier.any(axis=(1, 2)),
+                                       steps < budgets)
                 sv, carry = alg.scatter_carry_jnp(attrs, frontier, op_mode,
                                                   features=features)
                 carry_local = jax.lax.dynamic_slice_in_dim(
@@ -653,21 +826,24 @@ class FlipEngine:
                 ms = live.reshape(live.shape + (1,) * (attrs.ndim - 1))
                 return (jnp.where(ms, attrs_n, attrs),
                         jnp.where(ms, aux_n, aux),
-                        jnp.logical_and(frontier_n, live[:, None, None]),
+                        jnp.where(live[:, None, None], frontier_n,
+                                  frontier),
                         steps + live.astype(jnp.int32))
 
             steps0 = jnp.zeros(attrs.shape[0], jnp.int32)
-            attrs_f, aux_f, _, steps = jax.lax.while_loop(
+            attrs_f, aux_f, frontier_f, steps = jax.lax.while_loop(
                 cond, body, (attrs, aux, frontier, steps0))
-            return attrs_f, aux_f, steps
+            conv = jnp.logical_not(frontier_f.any(axis=(1, 2)))
+            return attrs_f, aux_f, steps, conv
 
         blocks_sh = jnp.asarray(blocks_sh)
-        attrs_f, aux_f, steps = jax.jit(dist_fix)(
+        attrs_f, aux_f, steps, conv = jax.jit(dist_fix)(
             blocks_sh, jnp.asarray(bsrc_sh), jnp.asarray(bdst_sh),
-            jnp.asarray(valid_sh), attrs0, aux0, frontier0)
+            jnp.asarray(valid_sh), attrs0, aux0, frontier0,
+            jnp.asarray(budgets0))
         out = self.algebra.finalize(attrs_f, aux_f)
         out = self.bg.to_orig(out[:, :bg.ntiles], features=features)
-        return out, np.asarray(steps)
+        return out, np.asarray(steps), np.asarray(conv)
 
     # -------------------------------------------------------------- #
     # deprecated pre-api entry points: thin shims over `execute`

@@ -146,6 +146,15 @@ class MetricsRegistry:
                 self._histograms[name] = Histogram(name, capacity)
             return self._histograms[name]
 
+    def sum_counters(self, prefix: str) -> int:
+        """Total across every counter whose name starts with `prefix` --
+        e.g. ``sum_counters("fallback.")`` for the degradation-ladder
+        total or ``sum_counters("shed.")`` for requests shed across
+        algebras."""
+        with self._lock:
+            return sum(c.value for n, c in self._counters.items()
+                       if n.startswith(prefix))
+
     # ------------------------------------------------------------ #
     def emit(self, kind: str, **fields) -> dict:
         """Append one structured event (returned for reuse); exported

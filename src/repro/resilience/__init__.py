@@ -1,0 +1,29 @@
+"""repro.resilience: the serving layer's failure model.
+
+Flip's premise is graceful handling of dynamic, irregular workloads;
+this package applies the same discipline to request/failure dynamics:
+
+  * `errors`  -- the typed taxonomy (`FlipError` and its five
+    subclasses) every failure maps onto; requests carry their error,
+    buckets and streams never die with them;
+  * `degrade` -- the validated degradation ladder (pallas→jnp,
+    compact→dense; every rung exact), exception classification, and
+    the per-dispatch NaN finite guard;
+  * `faults`  -- deterministic, seeded fault injection (backend raise,
+    NaN-poisoned results, step stalls) driving the chaos tests.
+
+See docs/RESILIENCE.md for the taxonomy table, ladder semantics, shed
+policy, and the fault-injection cookbook.
+"""
+from repro.resilience.degrade import classify, fallback_chain, finite_guard
+from repro.resilience.errors import (BackendFailure, CapacityExceeded,
+                                     ConvergenceFailure, DeadlineExceeded,
+                                     FlipError, InvalidRequest)
+from repro.resilience.faults import FaultInjector, FaultSpec, InjectedFault
+
+__all__ = [
+    "FlipError", "InvalidRequest", "CapacityExceeded", "DeadlineExceeded",
+    "ConvergenceFailure", "BackendFailure",
+    "fallback_chain", "classify", "finite_guard",
+    "FaultInjector", "FaultSpec", "InjectedFault",
+]

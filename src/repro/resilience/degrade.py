@@ -1,0 +1,89 @@
+"""Degradation ladder: validated fallback plans + failure classification.
+
+When a dispatch raises (pallas off-TPU, retrace failure, OOM) the
+serving layer does not lose the bucket -- it retries once per rung down
+a *validated* chain of simpler execution plans:
+
+    rung 0   the session's own plan (e.g. pallas kernel, compacted)
+    rung 1   relax_mode -> 'jnp'   (pure-XLA kernel body)
+    rung 2   compact    -> False   (dense block streaming)
+
+Every rung is EXACT: the jnp kernel body computes the same semiring
+relaxation as the Pallas kernel, and dense streaming only stops skipping
+⊕-identity blocks -- so a degraded response is bit-for-bit the primary
+response (echoing NEURA's retargetability: the program is the fixpoint,
+not the backend). The chain is built by `fallback_chain` and each rung
+is `resolve()`d up front, so a rung can never itself be an invalid plan.
+
+`classify` maps an arbitrary dispatch exception onto the typed taxonomy
+(`repro.resilience.errors`), and `finite_guard` is the cheap per-dispatch
+result check: a NaN anywhere in the attrs means a poisoned weight block
+or a broken kernel, never a legitimate algebra value (the semirings use
+±inf sentinels, not NaN), so it trips a retryable `BackendFailure`.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import numpy as np
+
+from repro.resilience.errors import BackendFailure, FlipError
+
+
+def fallback_chain(plan, algebra=None) -> list:
+    """The validated degradation ladder for `plan`: rung 0 is the plan
+    itself, each later rung swaps one knob for its simplest exact
+    equivalent (pallas/interpret -> jnp, then compact -> dense). Rungs
+    that would equal an earlier rung are dropped, so a plan already at
+    the bottom (jnp + dense) gets a one-rung chain. Every rung resolves
+    cleanly or is skipped -- the ladder can never trade one failure for
+    a plan-validation error."""
+    rungs = [plan]
+    cur = plan
+    if cur.relax_mode != "jnp":
+        cur = dataclasses.replace(cur, relax_mode="jnp")
+        rungs.append(cur)
+    if cur.compact is not False:
+        # compact=True is invalid for op mode, but then it is already
+        # False-resolved; replace() keeps the rest of the plan intact
+        rungs.append(dataclasses.replace(cur, compact=False))
+    out, seen = [], set()
+    for r in rungs:
+        try:
+            r = r.resolve(algebra)
+        except ValueError:
+            continue                      # never ladder onto a bad plan
+        if r.key() not in seen:
+            seen.add(r.key())
+            out.append(r)
+    return out
+
+
+def classify(exc: BaseException, rung: int = 0) -> FlipError:
+    """Map a dispatch-time exception to its typed form. Exceptions that
+    already carry a type (a `FlipError`) pass through; everything else a
+    backend can raise mid-dispatch -- XLA runtime errors, OOM, retrace
+    failures -- becomes a retryable `BackendFailure` with the original
+    exception chained as `cause`."""
+    if isinstance(exc, FlipError):
+        return exc
+    return BackendFailure(
+        f"dispatch failed on rung {rung}: {type(exc).__name__}: {exc}",
+        rung=rung, cause=exc)
+
+
+def finite_guard(attrs) -> None:
+    """Cheap per-dispatch sanity check on a result block: raise a
+    retryable `BackendFailure` if any entry is NaN. ±inf is legitimate
+    (the ⊕-identity sentinel of min_plus/max_min marks unreachable
+    vertices); NaN is not a member of any registered semiring's domain,
+    so it can only mean corrupted weights or a broken kernel. One
+    `np.isnan().any()` pass over the (B, n[, d]) result -- O(output),
+    far below the fixpoint's O(steps · blocks · T²)."""
+    a = np.asarray(attrs)
+    if np.isnan(a).any():
+        bad = int(np.isnan(a).sum())
+        raise BackendFailure(
+            f"finite guard: {bad} NaN entr{'y' if bad == 1 else 'ies'} "
+            f"in a {a.shape} result block (poisoned weights or kernel "
+            "fault)", cause=None)

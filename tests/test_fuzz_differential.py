@@ -226,3 +226,57 @@ def test_fuzz_features(seed):
     got, _ = eng.run(src)
     assert ALGEBRAS[algo].results_match(got, oracle(algo, g, src)), \
         f"{algo} engine diverged from (n, d) oracle; {repro}"
+
+
+# ------------------------------------------------------------------ #
+# fault-injection fuzz: seeded chaos schedules against the server
+# ------------------------------------------------------------------ #
+CHAOS_SEEDS = range(int(os.environ.get("FUZZ_CHAOS_SEEDS", "8")))
+
+
+@pytest.mark.parametrize("seed", CHAOS_SEEDS)
+def test_fuzz_chaos_serving(seed):
+    """Seeded fault schedules (backend raise + NaN poison at random
+    (dispatch, rung) ordinals) against a serving stream with
+    interleaved updates: zero lost requests, typed errors on every
+    failure, oracle-exact results on every success. Each seed draws its
+    own graph, request stream, and fault schedule; `FUZZ_CHAOS_SEEDS`
+    scales the corpus (CI smoke uses a smaller value)."""
+    from repro.launch.serve_graph import GraphServer
+    from repro.resilience import FaultInjector, FlipError
+
+    rng = np.random.default_rng(20_000 + seed)
+    n = int(rng.choice(NS_POWER))
+    g = make_power_law(n, int(rng.integers(2 * n, 4 * n)), seed=seed)
+    algos = ["bfs", "sssp"]
+    n_req = 16
+    repro = (f"repro: FUZZ_CHAOS_SEEDS={seed + 1} python -m pytest "
+             f"'tests/test_fuzz_differential.py::test_fuzz_chaos_serving"
+             f"[{seed}]' | graph: n={g.n} m={g.m}")
+
+    inj = FaultInjector.random(seed=30_000 + seed, dispatches=12,
+                               rate=0.4)
+    srv = GraphServer(g, batch=4, tile=TILE, fault_injector=inj)
+    g_cur, reqs, snaps = g, [], []
+    for i in range(n_req):
+        if i == n_req // 2 and g_cur.m:       # one mid-stream mutation
+            eu = g_cur.edge_sources()
+            j = int(rng.integers(g_cur.m))
+            batch = [(int(eu[j]), int(g_cur.indices[j]),
+                      float(g_cur.weights[j]) * 0.5)]
+            srv.update(batch)
+            g_cur = g_cur.apply_updates(batch)
+        reqs.append(srv.submit(algos[int(rng.integers(len(algos)))],
+                               int(rng.integers(g.n))))
+        snaps.append(g_cur)
+    srv.drain()
+
+    assert all(r.done for r in reqs), f"server lost requests; {repro}"
+    for r, g_snap in zip(reqs, snaps):
+        if r.error is not None:
+            assert isinstance(r.error, FlipError), \
+                f"untyped failure {r.error!r}; {repro}"
+        if r.ok:
+            assert ALGEBRAS[r.algo].results_match(
+                r.result, oracle(r.algo, g_snap, r.src)), \
+                f"{r.algo} src={r.src} rung={r.rung} diverged; {repro}"
