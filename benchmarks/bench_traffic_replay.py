@@ -1,0 +1,175 @@
+"""Traffic replay: continuous batching + result cache vs sync buckets.
+
+Replays one recorded request trace -- Zipf-distributed sources (the
+hot-source shape of real query traffic), mixed algebras, and interleaved
+monotone edge-mutation batches -- through both serving front-ends over
+the same graph:
+
+  * baseline: the synchronous bucket `GraphServer` (resilience off, the
+    bare dispatch path);
+  * continuous: `AsyncGraphServer` -- rotating per-algebra fixpoint
+    batches (lanes = B/2, so mixed-algebra traffic keeps per-window
+    occupancy high), K-step admission windows, and the shared result
+    cache short-circuiting repeated sources.
+
+Both arms serve the identical stream; the bench ASSERTS every response
+is bit-for-bit equal across arms before recording a single number --
+the speedup is scheduling policy, never semantics. Rows record
+queries/sec and p50/p99 end-to-end latency per arm, the speedup ratio,
+and the cache hit rate, appended to BENCH_serving.json. CI runs this in
+the `serving-replay-smoke` job with ``--min-speedup 1.5``:
+
+  BENCH_FAST=1 PYTHONPATH=src:. python -m benchmarks.bench_traffic_replay \
+      --min-speedup 1.5
+"""
+from __future__ import annotations
+
+import argparse
+import os
+import time
+
+import numpy as np
+
+from benchmarks.common import RESULTS, emit, write_json
+from repro.api import ExecutionPlan
+from repro.graphs import make_power_law
+from repro.launch.serve_graph import GraphServer
+from repro.serving import AsyncGraphServer
+
+ALGOS = ["bfs", "sssp"]
+
+
+def _zipf_src(rng, n: int, a: float) -> int:
+    """Zipf-distributed source id, clipped to the vertex set: a few hot
+    sources dominate, exactly the traffic shape a result cache exists
+    for."""
+    return int(min(rng.zipf(a) - 1, n - 1))
+
+
+def make_stream(g, n_requests: int, n_updates: int, zipf_a: float,
+                seed: int):
+    """One recorded trace: (algo, src) queries with ("update", batch)
+    mutations at evenly spaced positions. Updates are ⊕-improving
+    reweights plus one insert -- monotone, so the continuous arm's
+    warm-start reuse stays legal (both arms replay the identical
+    items)."""
+    rng = np.random.default_rng(seed)
+    upd_at = (set(np.linspace(n_requests // 3, n_requests - 4,
+                              n_updates, dtype=int).tolist())
+              if n_updates else set())
+    stream, gc = [], g
+    for i in range(n_requests):
+        if i in upd_at:
+            eu = gc.edge_sources()
+            idx = rng.choice(gc.m, size=min(4, gc.m), replace=False)
+            batch = [(int(eu[j]), int(gc.indices[j]),
+                      float(gc.weights[j]) * 0.5) for j in idx]
+            batch.append((int(rng.integers(g.n)),
+                          int(rng.integers(g.n)), 1.0))
+            stream.append(("update", batch))
+            gc = gc.apply_updates(batch)
+        stream.append((ALGOS[int(rng.integers(len(ALGOS)))],
+                       _zipf_src(rng, g.n, zipf_a)))
+    return stream
+
+
+def _replay(srv, stream):
+    """Serve the whole trace; returns (wall_s, requests)."""
+    t0 = time.perf_counter()
+    reqs = srv.serve(stream)
+    return time.perf_counter() - t0, reqs
+
+
+def _latency_quantiles(reqs):
+    lat = np.sort(np.asarray([r.queue_wait_s + r.service_s
+                              for r in reqs]))
+    return (float(lat[len(lat) // 2]),
+            float(lat[min(len(lat) - 1, int(len(lat) * 0.99))]))
+
+
+def run(min_speedup: float = 0.0, zipf_a: float = 1.6) -> float:
+    fast = bool(os.environ.get("BENCH_FAST"))
+    n, m = (512, 2048) if fast else (2048, 8192)
+    n_req = 64 if fast else 192
+    n_upd = 2 if fast else 4
+    repeats = 3 if fast else 5
+    batch, lanes, k = 8, 4, 2
+    g = make_power_law(n, m, seed=0)
+    stream = make_stream(g, n_req, n_upd, zipf_a, seed=1)
+    plan = ExecutionPlan(mode="data", batch=batch)
+
+    # one long-lived server per arm, exactly like production serving:
+    # sessions stay hot across repeats, updates step the graph version
+    # forward each replay (the same trace stays valid and monotone).
+    # Repeat 0 is the compile warmup and is dropped from the medians.
+    bucket = GraphServer(g, plan=plan, resilience=False)
+    cont = AsyncGraphServer(g, plan=plan, segment_steps=k, lanes=lanes)
+    for a in ALGOS:
+        bucket.session(a)
+        cont.session(a)
+
+    walls = {"bucket": [], "continuous": []}
+    quants = {}
+    for rep in range(repeats + 1):
+        wb, rb = _replay(bucket, stream)
+        wc, rc = _replay(cont, stream)
+        # semantics gate: the two schedulers must agree bit-for-bit on
+        # every response of every repeat before any number is recorded
+        assert all(r.ok for r in rb) and all(r.ok for r in rc)
+        for qb, qc in zip(rb, rc):
+            np.testing.assert_array_equal(qb.result, qc.result)
+        if rep == 0:
+            continue                   # compile/trace warmup
+        walls["bucket"].append(wb)
+        walls["continuous"].append(wc)
+        quants = {"bucket": _latency_quantiles(rb),
+                  "continuous": _latency_quantiles(rc)}
+
+    n_served = n_req
+    note = (f"|V|={n} |E|={g.m} {n_req} reqs zipf={zipf_a} "
+            f"{n_upd} updates B={batch}")
+    for arm in ("bucket", "continuous"):
+        wall = float(np.median(walls[arm]))
+        p50, p99 = quants[arm]
+        extra = f" lanes={lanes} K={k}" if arm == "continuous" else ""
+        emit(f"traffic_{arm}_qps", n_served / wall, note + extra)
+        emit(f"traffic_{arm}_p50_us", p50 * 1e6, note + extra)
+        emit(f"traffic_{arm}_p99_us", p99 * 1e6, note + extra)
+
+    hit_rate = cont.cache.stats()["hit_rate"]
+    emit("traffic_cache_hit_rate", hit_rate,
+         f"shared result cache over the zipf={zipf_a} trace")
+    speedup = (float(np.median(walls["bucket"]))
+               / float(np.median(walls["continuous"])))
+    emit("traffic_replay_speedup", speedup,
+         f"continuous-batching q/s over sync buckets "
+         f"(guard >= {min_speedup:.2f})" if min_speedup
+         else "continuous-batching q/s over sync buckets")
+    return speedup
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--min-speedup", type=float, default=0.0,
+                    help="fail when continuous-batching queries/sec is "
+                         "below this multiple of the sync-bucket "
+                         "baseline (0 = record only)")
+    ap.add_argument("--zipf", type=float, default=1.6,
+                    help="Zipf exponent of the source distribution")
+    args = ap.parse_args()
+    start = len(RESULTS)
+    speedup = None
+    try:
+        speedup = run(args.min_speedup, args.zipf)
+    finally:
+        write_json("serving", rows=RESULTS[start:])
+    print(f"[bench] traffic replay: continuous batching {speedup:.2f}x "
+          f"sync-bucket q/s (guard >= {args.min_speedup:.2f}x)")
+    if args.min_speedup and speedup < args.min_speedup:
+        raise SystemExit(
+            f"continuous-batching speedup {speedup:.2f}x is below the "
+            f"{args.min_speedup:.2f}x bound")
+
+
+if __name__ == "__main__":
+    main()

@@ -28,7 +28,7 @@ def main() -> None:
     from benchmarks import (bench_speedup, bench_parallelism,
                             bench_scaling, bench_compile_time,
                             bench_mapping_quality, bench_kernels,
-                            bench_serving)
+                            bench_serving, bench_traffic_replay)
     fast = bool(os.environ.get("BENCH_FAST"))
     calls = [
         (bench_speedup, dict(graphs_per_group=1, sources_per_graph=1,
@@ -45,6 +45,9 @@ def main() -> None:
         # overhead gate disabled here (inf): the aggregate run records
         # the ratio; the dedicated CI job enforces the <=1.05 bound
         (bench_serving, dict(max_overhead=float("inf"))),
+        # speedup gate disabled here (0): recorded only; the
+        # serving-replay-smoke CI job enforces the >=1.5x bound
+        (bench_traffic_replay, dict(min_speedup=0.0)),
     ]
     for m, kw in calls:
         try:

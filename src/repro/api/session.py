@@ -230,6 +230,15 @@ class CompiledQuery:
                            converged=conv, deadline_expired=expired,
                            telemetry=telemetry)
 
+    def validate_sources(self, srcs) -> None:
+        """Public admission-edge check: raise `InvalidRequest` unless
+        every id in `srcs` is a vertex of this session's graph. The
+        serving layer validates at submit time -- before a request is
+        queued -- with exactly the check `query` would apply, so a
+        malformed request fails synchronously instead of poisoning a
+        rotating batch later."""
+        self._validate_srcs(srcs)
+
     def _validate_srcs(self, srcs) -> None:
         """Source range check: every id must be a vertex of this graph.
         Rejecting here -- with the bad value named -- beats the

@@ -323,10 +323,13 @@ class FlipEngine:
 
         `trace_cap > 0` additionally records one per-step stats row into
         fixed-shape (trace_cap, ...) buffers riding the carry (see
-        `_step_stats`). Returns ``(attrs, aux, steps, trace, converged,
-        expired)`` where `trace` is a `(StepTrace, truncated)` pair or
-        None, `converged` is the (B,) bool end-of-run mask, and
-        `expired` marks deadline-stopped queries. The stat buffers are
+        `_step_stats`). Returns ``(attrs, aux, frontier, steps, trace,
+        converged, expired)`` where `trace` is a `(StepTrace, truncated)`
+        pair or None, `converged` is the (B,) bool end-of-run mask, and
+        `expired` marks deadline-stopped queries. The final frontier is
+        part of the return so a bounded-budget run is *resumable*: the
+        continuous-batching scheduler (`repro.serving`) re-enters with
+        the same state to run the next segment. The stat buffers are
         write-only extra outputs, so attrs and step counts are
         bit-identical either way."""
         b = attrs0.shape[0]
@@ -348,7 +351,7 @@ class FlipEngine:
         converged = ~np.asarray(frontier.any(axis=(1, 2)))
         expired = np.zeros(b, dtype=bool)
         if not trace_cap:
-            return attrs, aux, steps, None, converged, expired
+            return attrs, aux, frontier, steps, None, converged, expired
         n_iter = int(out[5])
         rows = min(n_iter, trace_cap)
         b_av, b_at, b_bf, b_cv = (np.asarray(x)[:rows] for x in out[6])
@@ -357,8 +360,8 @@ class FlipEngine:
                           blocks_fetched=b_bf,
                           blocks_skipped=np.int32(nb) - b_bf,
                           converged=b_cv)
-        return (attrs, aux, steps, (trace, n_iter > trace_cap),
-                converged, expired)
+        return (attrs, aux, frontier, steps,
+                (trace, n_iter > trace_cap), converged, expired)
 
     def _dense_fixpoint_jit(self, trace_cap: int):
         """The whole dense while_loop compiled as ONE jitted program per
@@ -483,8 +486,8 @@ class FlipEngine:
             n_iter += 1
         converged = ~np.asarray(frontier.any(axis=(1, 2)))
         if not trace_cap:
-            return (attrs, aux, jnp.asarray(steps), None, converged,
-                    expired)
+            return (attrs, aux, frontier, jnp.asarray(steps), None,
+                    converged, expired)
         nb = int(self.bg.bsrc.shape[0])
         bf = np.asarray([int(r[2]) for r in rows], dtype=np.int32)
         trace = StepTrace(
@@ -498,7 +501,7 @@ class FlipEngine:
             converged=(np.stack([r[3] for r in rows]) if rows
                        else np.zeros((0, b), bool)),
             step_wall_s=np.asarray(walls, dtype=np.float64))
-        return (attrs, aux, jnp.asarray(steps),
+        return (attrs, aux, frontier, jnp.asarray(steps),
                 (trace, n_iter > trace_cap), converged, expired)
 
     # -------------------------------------------------------------- #
@@ -650,7 +653,7 @@ class FlipEngine:
         deadline_expired)`` -- the last two are (B,) bool masks."""
         attrs0, aux0, frontier0 = self.initial_state(srcs, warm=warm)
         t0 = time.perf_counter()
-        attrs, aux, steps, rec, converged, expired = self._fixpoint(
+        attrs, aux, _, steps, rec, converged, expired = self._fixpoint(
             attrs0, aux0, frontier0, trace_cap, budgets=budgets,
             deadlines_t=deadlines_t)
         out = self.bg.to_orig(self.algebra.finalize(attrs, aux),
@@ -668,6 +671,75 @@ class FlipEngine:
                 truncated=truncated, tile=self.bg.tile,
                 feature_dim=self.feature_dim)
         return out, steps, tele, converged, expired
+
+    # -------------------------------------------------------------- #
+    # bounded-segment stepping: the continuous-batching yield surface
+    # -------------------------------------------------------------- #
+    def idle_state(self, b: int):
+        """(B, ntiles, T[, d]) state with every query lane *inert*:
+        ⊕-identity attrs, zero aux, empty frontier. An inert lane is
+        frozen by the per-query live mask (its frontier never fills), so
+        it costs nothing and cannot perturb the other lanes -- the
+        rotating batch's empty slots live in this state until a queued
+        query is admitted into them (`write_slot`)."""
+        bg = self.bg
+        zero = np.float32(self.algebra.semiring.zero)
+        shape = (b, bg.ntiles, bg.tile)
+        if self._features:
+            shape = shape + (self.feature_dim,)
+        return (jnp.full(shape, zero, dtype=jnp.float32),
+                jnp.zeros(shape, dtype=jnp.float32),
+                jnp.zeros((b, bg.ntiles, bg.tile), dtype=bool))
+
+    def write_slot(self, state, b: int, src: int,
+                   warm: WarmStart | None = None):
+        """Admit one query into lane `b` of a rotating-batch state:
+        lane `b` of (attrs, aux, frontier) is overwritten with the
+        freshly initialized (or warm-resumed) solo state of `src`, all
+        other lanes are untouched. Because every fixpoint operation is
+        independent along the batch axis (the PR-2 bit-exactness
+        contract), the admitted lane then evolves exactly as a solo run
+        of `src` would -- regardless of what the other lanes are doing."""
+        attrs, aux, frontier = state
+        a1, x1, f1 = self.initial_state([int(src)], warm=warm)
+        return (jnp.asarray(attrs).at[b].set(jnp.asarray(a1)[0]),
+                jnp.asarray(aux).at[b].set(jnp.asarray(x1)[0]),
+                jnp.asarray(frontier).at[b].set(jnp.asarray(f1)[0]))
+
+    def run_segment(self, state, budgets):
+        """Advance a (B, ...) fixpoint state by a bounded segment: lane
+        `b` runs at most ``budgets[b]`` further steps (0 = frozen) and
+        stops early the moment its frontier empties. This is the
+        step-boundary yield hook the continuous-batching scheduler
+        (`repro.serving`) is built on: between segments the host can
+        retire converged lanes, admit queued queries into idle lanes,
+        and enforce deadlines -- then re-enter with the same state.
+
+        Returns ``(state, steps, converged)``: the advanced (attrs, aux,
+        frontier) triple, the (B,) i32 steps actually taken this
+        segment, and the (B,) bool end-of-segment convergence mask
+        (True = frontier empty; inert/idle lanes read True).
+
+        Segmenting is exact: the per-step body is `_masked_step` -- the
+        same body both fixpoint drivers run -- so K-step segments
+        compose into bit-for-bit the single-call fixpoint, per lane
+        (budgets only partition the step sequence; they never change
+        it). The dense while_loop path takes budgets as a traced
+        argument, so varying segment lengths never retrace."""
+        attrs, aux, frontier = state
+        budgets = jnp.asarray(np.asarray(budgets, dtype=np.int32))
+        attrs, aux, frontier, steps, _, converged, _ = self._fixpoint(
+            attrs, aux, frontier, 0, budgets=budgets)
+        return ((attrs, aux, frontier), np.asarray(steps),
+                np.asarray(converged))
+
+    def finalize_state(self, attrs, aux) -> np.ndarray:
+        """Finalize a (tiled) fixpoint state into original-vertex-order
+        results: (B, ntiles, T[, d]) -> (B, n[, d]). Lane-independent,
+        so a rotating batch can finalize just the retiring lane by
+        slicing ``attrs[b:b+1]``."""
+        return self.bg.to_orig(self.algebra.finalize(attrs, aux),
+                               features=self._features)
 
     # -------------------------------------------------------------- #
     # streaming graph mutations: delta-driven incremental recompute

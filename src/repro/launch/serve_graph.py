@@ -27,10 +27,18 @@ then steps every cached session to the new graph version incrementally
 the compiled relax executables stay hot; only a batch that activates a
 previously empty tile pair retraces.
 
+This module is the synchronous-bucket front-end. The continuous-batching
+scheduler (`repro.serving.AsyncGraphServer`: rotating fixpoint batches,
+shared result cache, injectable clock -- see docs/SERVING.md) serves the
+same streams through the same CLI via ``--scheduler continuous``; both
+front-ends return results bit-for-bit equal to solo queries, so the
+choice is purely a latency/throughput policy.
+
 CLI demo (synthetic request stream over one dataset graph):
 
   PYTHONPATH=src python -m repro.launch.serve_graph --dataset LRN \
-      --algos bfs,sssp,pagerank --requests 64 --batch 8 --updates 4
+      --algos bfs,sssp,pagerank --requests 64 --batch 8 --updates 4 \
+      --scheduler continuous
 """
 from __future__ import annotations
 
@@ -52,6 +60,7 @@ from repro.resilience import (CapacityExceeded, ConvergenceFailure,
                               DeadlineExceeded, FaultInjector, FlipError,
                               InvalidRequest, classify, fallback_chain,
                               finite_guard)
+from repro.serving import AsyncGraphServer
 
 
 @dataclasses.dataclass
@@ -557,6 +566,20 @@ def main():
                     help="frontier-compacted block streaming (auto = on "
                          "for data mode)")
     ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--scheduler", default="bucket",
+                    choices=["bucket", "continuous"],
+                    help="'bucket': synchronous fixed-size buckets "
+                         "(this module); 'continuous': the rotating-"
+                         "batch scheduler with a shared result cache "
+                         "(repro.serving) -- results are bit-identical "
+                         "either way")
+    ap.add_argument("--segment-steps", type=int, default=4,
+                    help="continuous scheduler only: fixpoint steps per "
+                         "admission window (K); converged queries retire "
+                         "and queued ones are admitted every K steps")
+    ap.add_argument("--cache-capacity", type=int, default=256,
+                    help="continuous scheduler only: shared result-cache "
+                         "entries (0 disables cross-query sharing)")
     ap.add_argument("--no-resilience", action="store_true",
                     help="disable the degradation ladder / finite guard "
                          "/ admission control (the bare dispatch path; "
@@ -614,9 +637,20 @@ def main():
     injector = (FaultInjector.random(args.fault_seed, args.requests,
                                      algos=algos, rate=args.fault_rate)
                 if args.fault_rate > 0 else None)
-    srv = GraphServer(g, plan=plan, resilience=not args.no_resilience,
-                      max_queue_depth=args.max_queue_depth,
-                      fault_injector=injector)
+    if args.scheduler == "continuous":
+        if injector is not None:
+            raise SystemExit("--fault-rate drives the bucket server's "
+                             "dispatch hook; use --scheduler bucket "
+                             "for the chaos demo")
+        srv = AsyncGraphServer(g, plan=plan,
+                               segment_steps=args.segment_steps,
+                               cache_capacity=args.cache_capacity,
+                               max_queue_depth=args.max_queue_depth)
+    else:
+        srv = GraphServer(g, plan=plan,
+                          resilience=not args.no_resilience,
+                          max_queue_depth=args.max_queue_depth,
+                          fault_injector=injector)
     for a in algos:                      # build/compile outside the clock
         srv.session(a)
     submit_kw = {} if args.max_steps is None \
@@ -632,12 +666,22 @@ def main():
     wall = time.time() - t0
     assert all(r.done for r in reqs), "server lost requests"
     n_ok = sum(r.ok for r in reqs)
-    print(f"[serve] {len(reqs)} requests in {wall:.2f}s "
-          f"({len(reqs) / wall:.1f} req/s) over {srv.dispatches} "
-          f"dispatches of B={args.batch}, {srv.updates_applied} update "
-          f"batches applied; {n_ok} ok, {srv.failed} failed (typed), "
-          f"{srv.shed} shed, "
-          f"{srv.metrics.sum_counters('fallback.')} fallbacks")
+    if args.scheduler == "continuous":
+        cache = srv.cache.stats()
+        print(f"[serve] {len(reqs)} requests in {wall:.2f}s "
+              f"({len(reqs) / wall:.1f} req/s) over {srv.windows} "
+              f"admission windows of K={args.segment_steps} on "
+              f"B={args.batch} lanes, {srv.updates_applied} update "
+              f"batches applied; {n_ok} ok, {srv.failed} failed "
+              f"(typed), {srv.shed} shed; cache hit rate "
+              f"{cache['hit_rate']:.0%} ({cache['hits']} hits)")
+    else:
+        print(f"[serve] {len(reqs)} requests in {wall:.2f}s "
+              f"({len(reqs) / wall:.1f} req/s) over {srv.dispatches} "
+              f"dispatches of B={args.batch}, {srv.updates_applied} "
+              f"update batches applied; {n_ok} ok, {srv.failed} failed "
+              f"(typed), {srv.shed} shed, "
+              f"{srv.metrics.sum_counters('fallback.')} fallbacks")
     if args.stats:
         print(json.dumps(srv.stats(), indent=2, sort_keys=True))
     if args.check:

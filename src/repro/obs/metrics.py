@@ -55,6 +55,12 @@ class Gauge:
     def set(self, v: float) -> None:
         self.value = float(v)
 
+    def add(self, delta: float) -> None:
+        """Relative move (either direction) -- queue depths and
+        occupancy counts adjust by deltas at admission/retirement
+        instead of recomputing the absolute level."""
+        self.value += float(delta)
+
     def snapshot(self):
         return self.value
 

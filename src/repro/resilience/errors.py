@@ -75,10 +75,20 @@ class DeadlineExceeded(FlipError):
     code = "deadline_exceeded"
 
     def __init__(self, message: str, *, deadline_s: float = 0.0,
-                 elapsed_s: float = 0.0):
+                 elapsed_s: float = 0.0, where: str = ""):
         super().__init__(message)
         self.deadline_s = deadline_s
         self.elapsed_s = elapsed_s
+        #: "" (bucket server), "queue" (expired before any work), or
+        #: "fixpoint" (expired mid-relaxation, partial attached) --
+        #: the scheduler's SLO accounting splits on this
+        self.where = where
+
+    def describe(self) -> dict:
+        d = super().describe()
+        if self.where:
+            d["where"] = self.where
+        return d
 
 
 class ConvergenceFailure(FlipError):

@@ -1,0 +1,31 @@
+"""repro.serving: continuous-batching async query serving.
+
+The request-level execution layer over `repro.api` sessions:
+
+  * `scheduler` -- `AsyncGraphServer`, the continuous-batching front
+    door: per-algebra rotating fixpoint batches whose converged lanes
+    retire and refill from a request queue every K steps, and
+    `RotatingBatch`, the lane mechanics;
+  * `cache`     -- the bounded LRU `ResultCache` keyed (graph
+    fingerprint, algebra, src): cross-query sharing with structural
+    coherence, plus warm-start harvesting across one graph update;
+  * `clock`     -- injectable time (`SystemClock` / `VirtualClock`):
+    every scheduling decision is deterministic and replayable under a
+    virtual clock;
+  * `request`   -- `ServeRequest`, the per-query outcome record
+    (result or typed error, never neither).
+
+See docs/SERVING.md for the design and soundness arguments, and
+`repro.launch.serve_graph` (`--scheduler continuous`) for the CLI.
+"""
+from repro.serving.cache import CacheEntry, ResultCache
+from repro.serving.clock import SystemClock, VirtualClock
+from repro.serving.request import ServeRequest
+from repro.serving.scheduler import AsyncGraphServer, RotatingBatch
+
+__all__ = [
+    "AsyncGraphServer", "RotatingBatch",
+    "ResultCache", "CacheEntry",
+    "ServeRequest",
+    "SystemClock", "VirtualClock",
+]

@@ -1,0 +1,121 @@
+"""Bounded cross-query result cache keyed (graph fingerprint, algebra,
+source).
+
+Zipf-shaped serving traffic repeats sources constantly; a converged
+fixpoint is immutable for a given graph version, so the second query for
+(fp, algo, src) can be answered from memory in O(1) instead of re-running
+the fixpoint. Coherence is structural, not temporal: the fingerprint is
+part of the key and lookups always use the *current* graph's
+fingerprint, so an entry for a superseded graph version can never be
+served -- there is no TTL to mis-tune. On a graph update the superseded
+generation is explicitly retired (`retire_fp`): its converged entries
+are harvested as warm-start candidates for exactly one version step (the
+PR-5 provenance rule) and then dropped, so the bound is never wasted on
+dead versions.
+
+The bound is LRU over whole entries (a (n[, d]) float32 vector each);
+`capacity=0` disables caching entirely (the A/B baseline).
+"""
+from __future__ import annotations
+
+import dataclasses
+from collections import OrderedDict
+
+import numpy as np
+
+
+@dataclasses.dataclass(frozen=True)
+class CacheEntry:
+    """One converged query result: attrs in original vertex order plus
+    the step count the cold run took (served verbatim on a hit, so hits
+    are bit-identical to the cold query -- steps included)."""
+    attrs: np.ndarray
+    steps: int
+
+
+class ResultCache:
+    """LRU map of (graph_fp, algo, src) -> `CacheEntry`.
+
+    Only *converged* results may be inserted: a partial (budget- or
+    deadline-stopped) relaxation is request-specific state, not a
+    property of (graph, algo, src), and serving it to a later query
+    would silently truncate that query's answer.
+    """
+
+    def __init__(self, capacity: int = 256):
+        if capacity < 0:
+            raise ValueError(f"cache capacity must be >= 0, got "
+                             f"{capacity}")
+        self.capacity = int(capacity)
+        self._entries: OrderedDict[tuple, CacheEntry] = OrderedDict()
+        self.hits = 0
+        self.misses = 0
+        self.evictions = 0
+
+    def __len__(self) -> int:
+        return len(self._entries)
+
+    # ------------------------------------------------------------ #
+    def get(self, fp: str, algo: str, src: int) -> CacheEntry | None:
+        """Hit -> the entry (promoted to most-recently-used); miss ->
+        None. Callers must pass the *current* graph fingerprint -- that
+        is the whole coherence argument."""
+        if not self.capacity:
+            return None
+        key = (fp, algo, int(src))
+        entry = self._entries.get(key)
+        if entry is None:
+            self.misses += 1
+            return None
+        self._entries.move_to_end(key)
+        self.hits += 1
+        return entry
+
+    def put(self, fp: str, algo: str, src: int, attrs: np.ndarray,
+            steps: int) -> None:
+        """Insert one converged result; evicts least-recently-used
+        entries beyond the bound. The stored array is frozen
+        (non-writeable) so a hit can be served zero-copy without a later
+        caller mutating every other hit's view."""
+        if not self.capacity:
+            return
+        attrs = np.asarray(attrs)
+        if not attrs.flags.writeable:
+            frozen = attrs                    # already frozen: share it
+        else:
+            frozen = attrs.copy()
+            frozen.setflags(write=False)
+        self._entries[(fp, algo, int(src))] = CacheEntry(frozen,
+                                                         int(steps))
+        self._entries.move_to_end((fp, algo, int(src)))
+        while len(self._entries) > self.capacity:
+            self._entries.popitem(last=False)
+            self.evictions += 1
+
+    # ------------------------------------------------------------ #
+    def retire_fp(self, fp: str) -> dict:
+        """Drop every entry of graph generation `fp` and return them as
+        ``{(algo, src): CacheEntry}`` -- the warm-start candidate set
+        for the *next* generation (valid across exactly one update; the
+        scheduler re-validates monotonicity per algebra before using
+        one)."""
+        retired = {}
+        for key in [k for k in self._entries if k[0] == fp]:
+            entry = self._entries.pop(key)
+            retired[(key[1], key[2])] = entry
+        return retired
+
+    def clear(self) -> None:
+        self._entries.clear()
+
+    # ------------------------------------------------------------ #
+    def stats(self) -> dict:
+        lookups = self.hits + self.misses
+        return {
+            "capacity": self.capacity,
+            "entries": len(self._entries),
+            "hits": self.hits,
+            "misses": self.misses,
+            "hit_rate": (self.hits / lookups) if lookups else 0.0,
+            "evictions": self.evictions,
+        }

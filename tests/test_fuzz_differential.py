@@ -280,3 +280,94 @@ def test_fuzz_chaos_serving(seed):
             assert ALGEBRAS[r.algo].results_match(
                 r.result, oracle(r.algo, g_snap, r.src)), \
                 f"{r.algo} src={r.src} rung={r.rung} diverged; {repro}"
+
+
+# ------------------------------------------------------------------ #
+# continuous-batching traffic fuzz: Zipf sources, mixed algebras,
+# interleaved mutations, deterministic replay
+# ------------------------------------------------------------------ #
+TRAFFIC_SEEDS = range(int(os.environ.get("FUZZ_TRAFFIC_SEEDS", "8")))
+
+
+def _zipf_src(rng, n):
+    """Zipf-distributed source id (clipped to the vertex set): the
+    serving-traffic shape -- a few hot sources dominate, exercising
+    the result cache and warm-start reuse."""
+    return int(min(rng.zipf(1.4) - 1, n - 1))
+
+
+@pytest.mark.parametrize("seed", TRAFFIC_SEEDS)
+def test_fuzz_traffic(seed):
+    """Seeded Zipf traffic through the continuous-batching scheduler:
+    mixed algebras (scalar + vector state), hot repeated sources, and
+    interleaved monotone mutation batches, all on a virtual clock.
+    Every served result -- cold, cache hit, or warm-started -- must
+    match the numpy oracle for the graph version current at its
+    submission, zero requests may be lost, and the full transcript
+    must replay bit-for-bit on a second identically-seeded server.
+    `FUZZ_TRAFFIC_SEEDS` scales the corpus (CI smoke uses fewer)."""
+    from repro.serving import AsyncGraphServer, VirtualClock
+
+    rng0 = np.random.default_rng(40_000 + seed)
+    n = int(rng0.choice(NS_POWER))
+    g = make_power_law(n, int(rng0.integers(2 * n, 4 * n)), seed=seed)
+    algos = ["bfs", "sssp", "wcc", "pagerank", "multi_bfs"]
+    n_req = 20
+    repro = (f"repro: FUZZ_TRAFFIC_SEEDS={seed + 1} python -m pytest "
+             f"'tests/test_fuzz_differential.py::test_fuzz_traffic"
+             f"[{seed}]' | graph: n={g.n} m={g.m}")
+
+    def run():
+        rng = np.random.default_rng(50_000 + seed)
+        srv = AsyncGraphServer(
+            g, batch=3, tile=TILE, relax_mode="jnp",
+            segment_steps=int(rng.integers(1, 5)), cache_capacity=16,
+            clock=VirtualClock())
+        g_cur, reqs, snaps = g, [], []
+        for i in range(n_req):
+            if i and i % 7 == 0 and g_cur.m:
+                # ⊕-improving reweights + one insert: monotone, so
+                # warm-start reuse stays in play across versions
+                eu = g_cur.edge_sources()
+                idx = rng.choice(g_cur.m, size=min(3, g_cur.m),
+                                 replace=False)
+                batch = [(int(eu[j]), int(g_cur.indices[j]),
+                          float(g_cur.weights[j]) * 0.5) for j in idx]
+                batch.append((int(rng.integers(n)),
+                              int(rng.integers(n)), 1.0))
+                srv.update(batch)
+                g_cur = g_cur.apply_updates(batch)
+            reqs.append(srv.submit(
+                algos[int(rng.integers(len(algos)))], _zipf_src(rng, n)))
+            snaps.append(g_cur)
+            if rng.random() < 0.3:    # partial progress between submits
+                srv.pump()
+        srv.drain()
+        return srv, reqs, snaps
+
+    srv, reqs, snaps = run()
+    assert all(r.done for r in reqs), f"scheduler lost requests; {repro}"
+    for r, g_snap in zip(reqs, snaps):
+        assert r.ok, f"{r.algo} src={r.src} failed: {r.error!r}; {repro}"
+        if ALGEBRAS[r.algo].feature_dim == 1:
+            ref = oracle(r.algo, g_snap, r.src)
+        else:
+            ref, _ = reference.run(r.algo, g_snap, r.src)
+        assert ALGEBRAS[r.algo].results_match(r.result, ref), \
+            (f"{r.algo} src={r.src} hit={r.cache_hit} "
+             f"warm={r.warm_started} diverged; {repro}")
+
+    # deterministic replay: a second identically-seeded run produces
+    # the exact same transcript, scheduling decisions included
+    _, reqs2, _ = run()
+    t1 = [(r.req_id, r.algo, r.src, r.slot, r.admit_window,
+           r.queue_wait_s, r.service_s, r.steps, r.cache_hit,
+           r.warm_started,
+           None if r.result is None else r.result.tobytes())
+          for r in reqs]
+    t2 = [(r.req_id, r.algo, r.src, r.slot, r.admit_window,
+           r.queue_wait_s, r.service_s, r.steps, r.cache_hit,
+           r.warm_started,
+           None if r.result is None else r.result.tobytes())
+          for r in reqs2]
+    assert t1 == t2, f"transcript replay diverged; {repro}"

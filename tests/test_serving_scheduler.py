@@ -1,0 +1,530 @@
+"""Continuous-batching scheduler: replayable, bit-exact, cache-coherent.
+
+The contract under test (docs/SERVING.md):
+
+  * ROTATION IS INVISIBLE: every query served through the rotating
+    batch -- under any admission interleaving, any segment length K,
+    retire-and-refill mid-fixpoint, idle lanes all around -- returns
+    bit-for-bit the solo `query(src)` result (attrs AND step count),
+    across every algebra, scalar and vector state, jnp and interpret
+    relax paths;
+  * SCHEDULING IS REPLAYABLE: under a `VirtualClock` the full request
+    transcript (slots, admission windows, waits, latencies, outcomes)
+    is a pure function of the submission sequence -- two runs agree
+    exactly, no sleeps anywhere;
+  * THE CACHE IS COHERENT: hits are bit-identical to the cold query
+    they short-circuit, entries for superseded graph fingerprints are
+    structurally unreachable, the LRU bound holds, and warm-start reuse
+    across one update step is exact (and refused beyond one step);
+  * SLOs ARE ENFORCED ON THE SCHEDULER'S CLOCK: queue wait consumes the
+    deadline (expiry in queue = typed error, no work); mid-fixpoint
+    expiry retires a flagged partial at a window boundary without
+    disturbing the other lanes; admission control sheds newest with a
+    typed error; zero requests are ever lost.
+"""
+import numpy as np
+import pytest
+from conftest import ALGOS, VEC_ALGOS, oracle
+
+import flip
+from repro.algebra import ALGEBRAS
+from repro.api import ExecutionPlan
+from repro.graphs import make_power_law
+from repro.resilience import (CapacityExceeded, ConvergenceFailure,
+                              DeadlineExceeded, InvalidRequest)
+from repro.serving import (AsyncGraphServer, ResultCache, ServeRequest,
+                           VirtualClock)
+
+TILE = 16
+SRCS = [3, 11, 0, 27, 42, 8, 19]
+
+
+@pytest.fixture(scope="module")
+def g():
+    return make_power_law(60, 180, seed=3)
+
+
+def server(g, **kw):
+    kw.setdefault("tile", TILE)
+    kw.setdefault("relax_mode", "jnp")
+    kw.setdefault("clock", VirtualClock())
+    return AsyncGraphServer(g, **kw)
+
+
+_SOLO = {}
+
+
+def solo(g, algo, src, **query_kw):
+    """Reference solo query, sessions cached per (graph, algo)."""
+    key = (g.fingerprint(), algo)
+    cq = _SOLO.get(key)
+    if cq is None:
+        cq = _SOLO[key] = flip.compile(
+            g, algo, ExecutionPlan(tile=TILE, relax_mode="jnp"))
+    return cq.query(int(src), **query_kw)
+
+
+def transcript(reqs):
+    """The full observable outcome of a request sequence."""
+    return [(r.req_id, r.algo, r.src, r.slot, r.admit_window,
+             r.queue_wait_s, r.service_s, r.steps, r.cache_hit,
+             r.warm_started, r.converged,
+             None if r.error is None else r.error.code,
+             None if r.result is None else r.result.tobytes())
+            for r in reqs]
+
+
+# ------------------------------------------------------------------ #
+# rotation is invisible: bit-exact vs solo, everywhere
+# ------------------------------------------------------------------ #
+@pytest.mark.parametrize("algo", ALGOS + VEC_ALGOS)
+def test_rotation_bit_exact(g, algo):
+    """B=3 lanes serving 7 queries: four retire-and-refill rotations,
+    every result and step count bit-for-bit the solo run (cache off, so
+    every request crosses the rotating batch)."""
+    srv = server(g, batch=3, segment_steps=2, cache_capacity=0)
+    reqs = [srv.submit(algo, s) for s in SRCS]
+    srv.drain()
+    for r in reqs:
+        assert r.ok, (algo, r.src, r.error)
+        ref = solo(g, algo, r.src)
+        np.testing.assert_array_equal(r.result, np.asarray(ref.attrs))
+        assert r.steps == int(ref.steps)
+        if ALGEBRAS[algo].feature_dim == 1:
+            assert ALGEBRAS[algo].results_match(
+                r.result, oracle(algo, g, r.src))
+
+
+@pytest.mark.parametrize("algo", ["bfs", "sssp", "labelprop"])
+def test_rotation_bit_exact_interpret(g, algo):
+    """The interpret relax path rotates identically: same kernel body
+    as the compiled Pallas path, same bit-exact contract."""
+    srv = server(g, batch=2, segment_steps=3, cache_capacity=0,
+                 relax_mode="interpret")
+    reqs = [srv.submit(algo, s) for s in SRCS[:4]]
+    srv.drain()
+    for r in reqs:
+        assert r.ok, (algo, r.src, r.error)
+        ref = solo(g, algo, r.src)      # jnp reference: exact across
+        np.testing.assert_array_equal(  # relax backends
+            r.result, np.asarray(ref.attrs))
+        assert r.steps == int(ref.steps)
+
+
+def test_retire_and_refill_mid_fixpoint(g):
+    """Fast queries retire out of lanes while a slow one keeps
+    relaxing; refilled lanes join the warm batch mid-fixpoint and
+    nobody's result is disturbed. Sources 3/11 converge in one step,
+    27/42 take several -- with B=2 and K=1 the fast lane turns over
+    multiple queries before the slow lane retires."""
+    srv = server(g, batch=2, segment_steps=1, cache_capacity=0)
+    reqs = [srv.submit("bfs", s) for s in [27, 3, 11, 0, 42]]
+    srv.drain()
+    for r in reqs:
+        assert r.ok, (r.src, r.error)
+        ref = solo(g, "bfs", r.src)
+        np.testing.assert_array_equal(r.result, np.asarray(ref.attrs))
+        assert r.steps == int(ref.steps)
+    # the later queries were admitted into lanes mid-run (window > 0),
+    # i.e. genuine rotation, not sequential buckets
+    assert max(r.admit_window for r in reqs) > 0
+    assert {r.slot for r in reqs} <= {0, 1}
+
+
+def test_segment_length_is_policy_not_semantics(g):
+    """K only decides WHEN retirement happens; the results, step
+    counts, and outcomes are identical at every K."""
+    outcomes = []
+    for k in (1, 2, 3, 7):
+        srv = server(g, batch=3, segment_steps=k, cache_capacity=0)
+        reqs = [srv.submit("sssp", s) for s in SRCS]
+        srv.drain()
+        outcomes.append([(r.src, r.steps, r.converged,
+                          r.result.tobytes()) for r in reqs])
+    for other in outcomes[1:]:
+        assert other == outcomes[0]
+
+
+def test_empty_queue_idle(g):
+    """An empty pump is a no-op: no windows run, the virtual clock does
+    not move, and the scheduler reports zero pending."""
+    clock = VirtualClock()
+    srv = server(g, batch=2, clock=clock)
+    assert srv.pump() == 0
+    assert srv.pump() == 0
+    assert clock.now() == 0.0
+    assert srv.windows == 0
+    srv.drain()                      # drain on empty is also a no-op
+    # a single query amid idle lanes is still exact
+    r = srv.submit("bfs", 27)
+    srv.drain()
+    np.testing.assert_array_equal(
+        r.result, np.asarray(solo(g, "bfs", 27).attrs))
+    assert srv.stats()["queue_depth"] == 0
+
+
+def test_replay_determinism(g):
+    """The whole transcript -- slots, admission windows, waits,
+    service times, outcomes, result bytes -- replays bit-for-bit
+    across independent server instances."""
+    stream = [("bfs", 3), ("sssp", 9), ("bfs", 27), ("bfs", 3),
+              ("sssp", 42), ("wcc", 0), ("bfs", 11), ("sssp", 3)]
+
+    def run():
+        srv = server(g, batch=3, segment_steps=2)
+        reqs = [srv.submit(a, s) for a, s in stream]
+        srv.drain()
+        return transcript(reqs), srv.windows, srv.cache.stats()
+
+    t1, w1, c1 = run()
+    t2, w2, c2 = run()
+    assert t1 == t2
+    assert w1 == w2
+    assert c1 == c2
+
+
+# ------------------------------------------------------------------ #
+# deadlines on the scheduler's clock
+# ------------------------------------------------------------------ #
+def test_deadline_expiry_inside_rotating_batch(g):
+    """A deadline expires mid-fixpoint at a window boundary: the
+    request retires as a flagged partial with a typed error locating
+    the expiry ('fixpoint'), and its lane-mates are untouched."""
+    srv = server(g, batch=2, segment_steps=2)
+    slow = srv.submit("bfs", 27, deadline_s=3.0)   # needs ~7 steps
+    fast = srv.submit("bfs", 3)                    # 1 step
+    srv.drain()
+    assert not slow.ok and slow.deadline_expired
+    assert isinstance(slow.error, DeadlineExceeded)
+    assert slow.error.where == "fixpoint"
+    assert slow.error.describe()["where"] == "fixpoint"
+    assert slow.result is not None and not slow.converged
+    assert 0 < slow.steps < int(solo(g, "bfs", 27).steps)
+    # the partial is the real prefix of the relaxation: bit-equal to a
+    # solo run stopped at the same step
+    part = solo(g, "bfs", 27, max_steps=slow.steps)
+    np.testing.assert_array_equal(slow.result, np.asarray(part.attrs))
+    assert fast.ok
+    np.testing.assert_array_equal(
+        fast.result, np.asarray(solo(g, "bfs", 3).attrs))
+
+
+def test_deadline_expiry_in_queue(g):
+    """Queue wait consumes the deadline: a request that expires before
+    a lane frees up comes back typed, with NO partial (no work done)."""
+    clock = VirtualClock()
+    srv = server(g, batch=1, clock=clock)
+    first = srv.submit("bfs", 27)                 # occupies the lane
+    queued = srv.submit("bfs", 42, deadline_s=1.0)
+    clock.advance(2.0)                            # expires while queued
+    srv.drain()
+    assert first.ok
+    assert not queued.ok and queued.deadline_expired
+    assert isinstance(queued.error, DeadlineExceeded)
+    assert queued.error.where == "queue"
+    assert queued.result is None
+    assert queued.queue_wait_s >= 1.0
+
+
+def test_step_budget_partial_is_exact_prefix(g):
+    """max_steps exhaustion retires a flagged ConvergenceFailure whose
+    partial equals the solo run under the same budget."""
+    srv = server(g, batch=2, segment_steps=2)
+    r = srv.submit("sssp", 27, max_steps=3)
+    srv.drain()
+    assert not r.ok and isinstance(r.error, ConvergenceFailure)
+    assert not r.converged and r.steps == 3
+    ref = solo(g, "sssp", 27, max_steps=3)
+    np.testing.assert_array_equal(r.result, np.asarray(ref.attrs))
+
+
+# ------------------------------------------------------------------ #
+# admission control + zero lost requests
+# ------------------------------------------------------------------ #
+def test_shed_and_zero_lost(g):
+    srv = server(g, batch=1, max_queue_depth=2)
+    reqs = [srv.submit("bfs", i) for i in range(6)]
+    shed = [r for r in reqs if isinstance(r.error, CapacityExceeded)]
+    assert len(shed) == 4            # queue bound 2: newest 4 rejected
+    srv.drain()
+    assert all(r.done for r in reqs)
+    assert sum(r.ok for r in reqs) == 2
+    assert srv.shed == 4
+    srv2 = server(g, batch=1, quotas={"bfs": 1})
+    out = [srv2.submit("bfs", i) for i in range(3)]
+    assert sum(isinstance(r.error, CapacityExceeded) for r in out) == 2
+
+
+def test_invalid_requests_raise_synchronously(g):
+    srv = server(g)
+    with pytest.raises(InvalidRequest):
+        srv.submit("nope", 0)
+    with pytest.raises(InvalidRequest):
+        srv.submit("bfs", g.n)
+    with pytest.raises(InvalidRequest):
+        srv.submit("bfs", -1)
+    with pytest.raises(InvalidRequest):
+        srv.submit("bfs", 0, max_steps=0)
+    with pytest.raises(InvalidRequest):
+        srv.submit("bfs", 0, deadline_s=-1.0)
+    assert srv.pending == 0          # nothing malformed was queued
+
+
+def test_distributed_plans_rejected(g):
+    with pytest.raises(ValueError, match="bucket GraphServer"):
+        AsyncGraphServer(g, tile=TILE,
+                         plan=ExecutionPlan(distributed=True, tile=TILE))
+
+
+# ------------------------------------------------------------------ #
+# the shared result cache
+# ------------------------------------------------------------------ #
+def test_cache_hit_bit_identical_to_cold(g):
+    srv = server(g, batch=2)
+    cold = srv.submit("bfs", 27)
+    srv.drain()
+    hit = srv.submit("bfs", 27)
+    assert hit.cache_hit and hit.done and hit.ok
+    assert hit.steps == cold.steps
+    np.testing.assert_array_equal(hit.result, cold.result)
+    np.testing.assert_array_equal(
+        hit.result, np.asarray(solo(g, "bfs", 27).attrs))
+    assert srv.cache.stats()["hits"] == 1
+
+
+def test_cache_property_randomized(g):
+    """Property test over random submit/update/submit sequences: every
+    served result (hit or cold) is bit-identical to the solo query on
+    the graph version current at its submission; superseded versions
+    are never served. Warm reuse is off so every cache entry traces to
+    a cold run and hit step counts must equal cold step counts too
+    (warm-start exactness has its own tests)."""
+    rng = np.random.default_rng(7)
+    srv = server(g, batch=3, segment_steps=2, warm_reuse=False)
+    g_cur = g
+    for _ in range(4):
+        reqs = []
+        # two waves per graph version: wave-2 repeats of wave-1
+        # sources exercise cache hits (a repeat submitted before its
+        # twin completes runs cold -- no coalescing -- so hits need a
+        # drain in between)
+        for _ in range(2):
+            wave = []
+            for _ in range(6):
+                algo = ("bfs", "sssp", "wcc")[int(rng.integers(3))]
+                src = int(rng.integers(8))   # small pool -> repeats
+                wave.append((srv.submit(algo, src), algo, src))
+            srv.drain()
+            reqs.extend(wave)
+        for r, algo, src in reqs:
+            assert r.ok, (algo, src, r.error)
+            ref = solo(g_cur, algo, src)
+            np.testing.assert_array_equal(r.result,
+                                          np.asarray(ref.attrs))
+            assert r.steps == int(ref.steps), (algo, src, r.cache_hit)
+        # mutate: improving reweights keep the stream monotone
+        eu = g_cur.edge_sources()
+        idx = rng.choice(g_cur.m, size=3, replace=False)
+        batch = [(int(eu[i]), int(g_cur.indices[i]),
+                  float(g_cur.weights[i]) * 0.5) for i in idx]
+        batch.append((int(rng.integers(g.n)), int(rng.integers(g.n)),
+                      1.0))
+        srv.update(batch)
+        g_cur = g_cur.apply_updates(batch)
+        assert srv.graph.fingerprint() == g_cur.fingerprint()
+    assert srv.cache.stats()["hits"] > 0     # Zipf-free but repeats land
+
+
+def test_cache_lru_bound():
+    c = ResultCache(capacity=3)
+    for i in range(5):
+        c.put("fp", "bfs", i, np.full(4, i, np.float32), i + 1)
+    assert len(c) == 3 and c.evictions == 2
+    assert c.get("fp", "bfs", 0) is None     # oldest two evicted
+    assert c.get("fp", "bfs", 1) is None
+    e = c.get("fp", "bfs", 2)                # survivor, promoted to MRU
+    assert e is not None and e.steps == 3
+    c.put("fp", "bfs", 9, np.zeros(4, np.float32), 1)
+    assert c.get("fp", "bfs", 2) is not None   # MRU survived insertion
+    assert c.get("fp", "bfs", 3) is None       # LRU paid for it
+    with pytest.raises(ValueError):
+        ResultCache(capacity=-1)
+    # a served entry is frozen: callers cannot poison later hits
+    with pytest.raises(ValueError):
+        e.attrs[0] = 99.0
+
+
+def test_cache_eviction_end_to_end(g):
+    """Server-level LRU: with capacity 2, the first of three distinct
+    sources is evicted -- re-querying it is a miss (recomputed, still
+    exact), while the recent ones hit."""
+    srv = server(g, batch=2, cache_capacity=2)
+    for s in (3, 27, 42):
+        srv.submit("bfs", s)
+        srv.drain()
+    assert len(srv.cache) == 2
+    r3 = srv.submit("bfs", 3)
+    srv.drain()
+    assert not r3.cache_hit and r3.ok
+    r42 = srv.submit("bfs", 42)
+    assert r42.cache_hit
+
+
+def test_cache_disabled(g):
+    srv = server(g, batch=2, cache_capacity=0)
+    a = srv.submit("bfs", 27)
+    srv.drain()
+    b = srv.submit("bfs", 27)
+    srv.drain()
+    assert not a.cache_hit and not b.cache_hit
+    np.testing.assert_array_equal(a.result, b.result)
+    assert srv.cache.stats() == {
+        "capacity": 0, "entries": 0, "hits": 0, "misses": 0,
+        "hit_rate": 0.0, "evictions": 0}
+
+
+def test_superseded_fingerprint_never_served(g):
+    """After an update, the old generation's entries are structurally
+    unreachable: a repeated source recomputes on the new graph and the
+    results genuinely differ (the mutation improves this path)."""
+    srv = server(g, batch=2)
+    before = srv.submit("sssp", 27)
+    srv.drain()
+    assert before.ok
+    # a near-zero shortcut 27 -> its farthest reachable vertex: sssp
+    # from 27 must improve, so stale-entry reuse would be visible
+    far = int(np.argmax(np.where(
+        np.isfinite(before.result) & (before.result > 0),
+        before.result, -1.0)))
+    assert before.result[far] > 0.001
+    srv.update([(27, far, 0.001)])
+    after = srv.submit("sssp", 27)
+    srv.drain()
+    assert after.ok and not after.cache_hit
+    ref = solo(srv.graph, "sssp", 27)
+    np.testing.assert_array_equal(after.result, np.asarray(ref.attrs))
+    assert not np.array_equal(after.result, before.result)
+
+
+# ------------------------------------------------------------------ #
+# warm-start reuse across one update step
+# ------------------------------------------------------------------ #
+def test_warm_start_across_one_update(g):
+    """Monotone algebra + improving batch: repeated sources resume from
+    the superseded generation's cached fixpoints -- flagged
+    `warm_started`, results bit-equal the scratch solo on the new
+    graph."""
+    srv = server(g, batch=2)
+    for s in (3, 27):
+        srv.submit("sssp", s)
+    srv.drain()
+    eu = g.edge_sources()
+    batch = [(int(eu[i]), int(g.indices[i]), float(g.weights[i]) * 0.5)
+             for i in (0, 7, 13)]
+    srv.update(batch)
+    g2 = g.apply_updates(batch)
+    reqs = [srv.submit("sssp", s) for s in (3, 27)]
+    srv.drain()
+    for r in reqs:
+        assert r.ok and r.warm_started, (r.src, r.error)
+        ref = solo(g2, "sssp", r.src)
+        np.testing.assert_array_equal(r.result, np.asarray(ref.attrs))
+    # an uncached source admits cold alongside warm lanes, still exact
+    cold = srv.submit("sssp", 42)
+    srv.drain()
+    assert cold.ok and not cold.warm_started
+    np.testing.assert_array_equal(
+        cold.result, np.asarray(solo(g2, "sssp", 42).attrs))
+
+
+def test_warm_candidates_live_one_version_step(g):
+    """PR-5 provenance: warm candidates come from the immediately
+    preceding version only. Two back-to-back updates with no queries
+    between leave nothing to resume from -- queries run cold and
+    exact."""
+    srv = server(g, batch=2)
+    srv.submit("sssp", 3)
+    srv.drain()
+    b1 = [(3, 50, 0.5)]
+    b2 = [(5, 59, 0.5)]
+    srv.update(b1)
+    srv.update(b2)                   # candidates from b1 now stale
+    r = srv.submit("sssp", 3)
+    srv.drain()
+    assert r.ok and not r.warm_started
+    g2 = g.apply_updates(b1).apply_updates(b2)
+    np.testing.assert_array_equal(
+        r.result, np.asarray(solo(g2, "sssp", 3).attrs))
+
+
+def test_non_monotone_never_warm_starts(g):
+    """pagerank (residual algebra): resolve_warm refuses, queries after
+    an update run cold and exact."""
+    srv = server(g, batch=2)
+    srv.submit("pagerank", 3)
+    srv.drain()
+    srv.update([(3, 50, 0.5)])
+    r = srv.submit("pagerank", 3)
+    srv.drain()
+    assert r.ok and not r.warm_started
+    np.testing.assert_array_equal(
+        r.result, np.asarray(solo(srv.graph, "pagerank", 3).attrs))
+
+
+# ------------------------------------------------------------------ #
+# serve() streams, metrics, stats
+# ------------------------------------------------------------------ #
+def test_serve_stream_graph_version_order(g):
+    """An ("update", batch) stream item drains earlier queries against
+    the pre-update graph; later ones see the new version -- submission
+    order is graph-version order, matching the bucket server."""
+    batch = [(3, 50, 0.001)]
+    srv = server(g, batch=2)
+    reqs = srv.serve([("sssp", 3), ("update", batch), ("sssp", 3)])
+    g2 = g.apply_updates(batch)
+    np.testing.assert_array_equal(
+        reqs[0].result, np.asarray(solo(g, "sssp", 3).attrs))
+    np.testing.assert_array_equal(
+        reqs[1].result, np.asarray(solo(g2, "sssp", 3).attrs))
+    assert srv.updates_applied == 1
+
+
+def test_stats_and_metrics(g):
+    import json
+    srv = server(g, batch=2, segment_steps=2)
+    for s in (3, 27, 3, 42):
+        srv.submit("bfs", s)
+    srv.drain()
+    st = srv.stats()
+    json.dumps(st)                   # JSON-ready end to end
+    assert st["scheduler"] == "continuous"
+    assert st["queue_depth"] == 0
+    assert st["occupancy"] == 0.0    # drained
+    assert st["windows"] == srv.windows > 0
+    assert st["completed"] == 4
+    assert 0.0 <= st["cache"]["hit_rate"] <= 1.0
+    snap = st["metrics"]
+    assert snap["counters"]["completed.bfs"] == 4
+    assert "latency_s.bfs" in snap["histograms"]
+    assert snap["gauges"]["queue_depth"] == 0.0
+    # Gauge.add moves both ways (the scheduler's delta-adjust surface)
+    gauge = srv.metrics.gauge("probe")
+    gauge.add(2.5)
+    gauge.add(-1.0)
+    assert gauge.snapshot() == 1.5
+
+
+def test_request_done_invariant(g):
+    """Every ServeRequest path ends `done`: result, typed error, shed,
+    expired, partial -- never neither."""
+    r = ServeRequest(0, "bfs", 1)
+    assert not r.done and not r.ok
+    clock = VirtualClock()
+    srv = server(g, batch=1, max_queue_depth=1, clock=clock)
+    reqs = [srv.submit("bfs", 27, deadline_s=3.0),
+            srv.submit("bfs", 42, deadline_s=0.5),
+            srv.submit("bfs", 3)]            # shed (queue full)
+    clock.advance(1.0)
+    srv.drain()
+    assert all(q.done for q in reqs)
+    assert sum(q.ok for q in reqs) <= 1

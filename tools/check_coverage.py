@@ -30,6 +30,10 @@ BASELINES = {
     # injection (measured ~93% under tests/test_resilience.py + the
     # chaos-serving fuzz axis)
     "src/repro/resilience/": 85.0,
+    # continuous-batching scheduler, result cache, clocks (measured ~89%
+    # under tests/test_serving_scheduler.py alone; the traffic fuzz axis
+    # adds more)
+    "src/repro/serving/": 85.0,
 }
 
 
