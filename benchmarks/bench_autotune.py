@@ -1,0 +1,110 @@
+"""Autotuner-quality guard: the tuned plan must actually be good.
+
+Runs one full measured tune on a fixed power-law graph (fresh tmp
+store, fixed seed) and gates on two ratios computed from the tuner's
+own measurement table:
+
+  * ``vs_default`` -- default-plan cost / chosen cost. Must stay
+    >= 1.0: the static default is always in the candidate list, and
+    the tuner picks the argmin, so falling below 1.0 means the
+    selection logic regressed.
+  * ``vs_worst`` -- worst *measured* candidate / chosen. Must clear
+    >= 1.2: the knob space must keep containing genuinely bad
+    configurations the tuner steers around (dense streaming at a
+    sparse frontier, a pessimal tile). If every candidate measures the
+    same, the sweep has collapsed and tuning is dead weight.
+
+Ratios restrict to measured candidates -- the analytically-priced ones
+(interpret) would inflate vs_worst with a model number, not evidence.
+A store-roundtrip probe (second tune = cache hit, identical plan) rides
+along. Rows append to BENCH_autotune.json.
+
+CI runs this as the `autotune-smoke` job:
+
+  BENCH_FAST=1 PYTHONPATH=src:. python -m benchmarks.bench_autotune \
+      --min-vs-default 1.0 --min-vs-worst 1.2
+"""
+from __future__ import annotations
+
+import argparse
+import os
+import tempfile
+
+from benchmarks.common import RESULTS, emit, write_json
+from repro.graphs import make_power_law
+
+
+def run(min_vs_default: float = 1.0,
+        min_vs_worst: float = 1.2) -> tuple[float, float]:
+    """One measured tune + gates; returns (vs_default, vs_worst)."""
+    from repro.autotune import TuningStore, autotune
+    fast = bool(os.environ.get("BENCH_FAST"))
+    n = 2048 if fast else 8192
+    g = make_power_law(n, 3 * n, seed=0)
+    with tempfile.TemporaryDirectory() as d:
+        store = TuningStore(os.path.join(d, "autotune.json"))
+        rep = autotune(g, "bfs", seed=0, store=store)
+        measured = [(s, rep.scores[s.plan.key()]) for s in rep.samples
+                    if s.source == "measured"]
+        default_score = next(iter(rep.scores.values()))  # base is first
+        chosen_score = rep.scores[rep.chosen.key()]
+        worst_score = max(sc for _, sc in measured)
+        vs_default = default_score / chosen_score
+        vs_worst = worst_score / chosen_score
+        emit("autotune_chosen_step_us", chosen_score,
+             f"power-law |V|={g.n} |E|={g.m} tile={rep.chosen.tile} "
+             f"relax={rep.chosen.relax_mode} "
+             f"compact={rep.chosen.compact} "
+             f"({len(measured)}/{len(rep.samples)} measured)")
+        emit("autotune_default_step_us", default_score,
+             "static ExecutionPlan() on the same measurement table")
+        emit("autotune_vs_default", vs_default,
+             f"default/chosen step cost (guard >= {min_vs_default})")
+        emit("autotune_vs_worst", vs_worst,
+             f"worst-measured/chosen step cost (guard >= "
+             f"{min_vs_worst})")
+        # store roundtrip: the second tune must be a cache hit that
+        # reproduces the plan bit-for-bit
+        rep2 = autotune(g, "bfs", seed=0, store=store)
+        roundtrip = float(rep2.cached
+                          and rep2.chosen.key() == rep.chosen.key())
+        emit("autotune_store_roundtrip", roundtrip,
+             "1.0 = second tune served from the store, same plan")
+        if not roundtrip:
+            raise SystemExit("autotune store roundtrip failed: second "
+                             "tune was not a cache hit with the same "
+                             "plan")
+    return vs_default, vs_worst
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--min-vs-default", type=float, default=1.0,
+                    help="fail when the chosen plan is slower than the "
+                         "static default on the tuner's own table")
+    ap.add_argument("--min-vs-worst", type=float, default=1.2,
+                    help="fail when the chosen plan does not beat the "
+                         "worst measured candidate by this factor")
+    args = ap.parse_args()
+    start = len(RESULTS)
+    ratios = None
+    try:
+        ratios = run(args.min_vs_default, args.min_vs_worst)
+    finally:
+        write_json("autotune", rows=RESULTS[start:])
+    vs_default, vs_worst = ratios
+    print(f"[bench] tuned plan: {vs_default:.2f}x vs default "
+          f"(bound >= {args.min_vs_default}), {vs_worst:.2f}x vs worst "
+          f"measured candidate (bound >= {args.min_vs_worst})")
+    if vs_default < args.min_vs_default:
+        raise SystemExit(
+            f"tuned plan is {vs_default:.3f}x the default (< "
+            f"{args.min_vs_default}): selection regressed")
+    if vs_worst < args.min_vs_worst:
+        raise SystemExit(
+            f"tuned plan only {vs_worst:.3f}x the worst measured "
+            f"candidate (< {args.min_vs_worst}): the sweep collapsed")
+
+
+if __name__ == "__main__":
+    main()

@@ -28,7 +28,10 @@ def main() -> None:
     from benchmarks import (bench_speedup, bench_parallelism,
                             bench_scaling, bench_compile_time,
                             bench_mapping_quality, bench_kernels,
-                            bench_serving, bench_traffic_replay)
+                            bench_serving, bench_traffic_replay,
+                            bench_features, bench_incremental,
+                            bench_frontier_density,
+                            bench_telemetry_overhead, bench_autotune)
     fast = bool(os.environ.get("BENCH_FAST"))
     calls = [
         (bench_speedup, dict(graphs_per_group=1, sources_per_graph=1,
@@ -48,13 +51,22 @@ def main() -> None:
         # speedup gate disabled here (0): recorded only; the
         # serving-replay-smoke CI job enforces the >=1.5x bound
         (bench_traffic_replay, dict(min_speedup=0.0)),
+        # kwargs are explicit (the dispatch below only routes to run()
+        # on a non-empty kwargs dict); fast honors BENCH_FAST
+        (bench_features, dict(fast=fast)),
+        (bench_incremental, dict(fast=fast)),
+        (bench_frontier_density, dict(fast=fast)),
+        # overhead gate disabled here (inf): recorded only; the
+        # telemetry-overhead CI job enforces the bound
+        (bench_telemetry_overhead, dict(max_ratio=float("inf"))),
+        # tuned-vs-default/worst gates disabled here (0): recorded
+        # only; the autotune-smoke CI job enforces the bounds
+        (bench_autotune, dict(min_vs_default=0.0, min_vs_worst=0.0)),
     ]
     for m, kw in calls:
         try:
             if kw and hasattr(m, "run"):
                 m.run(**kw)
-                if m is bench_scaling or m is bench_compile_time:
-                    pass
             else:
                 m.main()
         except Exception:

@@ -69,6 +69,14 @@ class ExecutionPlan:
                    per call; queries it stops come back as flagged
                    partials (`deadline_expired`), never silent
                    truncations. Not supported on distributed plans.
+    tuned       -- ask the plan autotuner (`repro.autotune`) to pick
+                   the performance knobs (tile / relax_mode / compact /
+                   batch) for this (graph, program, backend) at compile
+                   time, consulting the tuning store first. Pure
+                   policy: a tuned plan is bit-exact with the default.
+                   `resolve()` alone leaves the flag in place -- it has
+                   no graph to tune against; `flip.compile` is where it
+                   collapses.
     """
 
     mode: str = "data"
@@ -83,6 +91,7 @@ class ExecutionPlan:
     feature_dim: int = 0         # 0 = auto (the program's native width)
     max_steps: int = 100_000
     deadline_s: float | None = None
+    tuned: bool = False
 
     # -------------------------------------------------------------- #
     @classmethod
@@ -148,6 +157,15 @@ class ExecutionPlan:
                 "plan.deadline_s is not supported on distributed plans: "
                 "the shard_map fixpoint has no host-observable step "
                 "boundary to enforce it at -- use max_steps")
+        if not isinstance(self.tuned, bool):
+            raise ValueError(
+                f"plan.tuned must be a bool, got {self.tuned!r}")
+        if self.tuned and (self.distributed or self.mesh is not None):
+            raise ValueError(
+                "plan.tuned is not supported on distributed plans: the "
+                "tuning sweep measures local run_segment segments, "
+                "which say nothing about shard_map dispatch -- tune a "
+                "local plan, then add the mesh")
         if algebra is not None and self.warm == "always" \
                 and algebra.kind != "monotone":
             raise ValueError(
@@ -189,7 +207,7 @@ class ExecutionPlan:
                 self.batch, self.distributed,
                 None if self.mesh is None else id(self.mesh),
                 self.mesh_axis, self.warm, self.feature_dim,
-                self.max_steps, self.deadline_s)
+                self.max_steps, self.deadline_s, self.tuned)
 
 
 # ------------------------------------------------------------------ #
@@ -213,14 +231,18 @@ def plan_from_cli(engine: str, mode: str, compact: bool | str = "auto",
                   feature_dim: int = 0) -> ExecutionPlan:
     """One ExecutionPlan from the graph_run-style CLI surface: folds the
     deprecated ``--engine op`` alias, maps ``--engine dist`` to a
-    distributed plan, and threads the remaining knobs through unchanged
-    (the 'sim' engine never reaches a plan -- the cycle simulator is not
-    a FlipEngine backend)."""
+    distributed plan, and threads the remaining knobs through unchanged.
+    The 'sim' engine is still not an ExecutionPlan backend -- the cycle
+    simulator runs its own mapped-fabric model -- though its cost
+    vocabulary does reach plans indirectly, as the analytic bridge of
+    the plan autotuner (`repro.autotune.measure`)."""
     engine, mode = resolve_cli_engine(engine, mode)
     if engine not in ("jax", "dist"):
         raise ValueError(
             f"engine {engine!r} has no ExecutionPlan (expected 'jax' or "
-            "'dist'; 'sim' runs the cycle simulator, not the engine)")
+            "'dist'; 'sim' runs the cycle-accurate fabric simulator, "
+            "which informs plan choice only through the autotuner's "
+            "analytic cost bridge, not as an engine backend)")
     return ExecutionPlan(mode=mode, compact=compact, tile=tile,
                          batch=batch, distributed=(engine == "dist"),
                          feature_dim=feature_dim)

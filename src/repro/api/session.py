@@ -114,6 +114,9 @@ class CompiledQuery:
     program: Program
     plan: ExecutionPlan
     engine: FlipEngine
+    tune: object = None                # TuneReport when compiled with a
+                                       # tuned=True plan (why the knobs
+                                       # are what they are)
     delta: UpdateDelta | None = None   # set by update(): the last batch
     prev_fp: str | None = None         # fingerprint of the pre-update
                                        # graph the delta resumes from
@@ -219,6 +222,20 @@ class CompiledQuery:
         wall_s = time.perf_counter() - t0
         telemetry = None
         if trace:
+            if self.tune is not None:
+                # tuned sessions stamp their provenance on every
+                # dispatch record: which knobs the tuner chose and why
+                stamp = {
+                    "chosen": {"tile": self.plan.tile,
+                               "relax_mode": self.plan.relax_mode,
+                               "compact": self.plan.compact,
+                               "batch": self.plan.batch},
+                    "why": self.tune.why,
+                    "cached": self.tune.cached,
+                    "fingerprint": self.tune.profile.fingerprint(),
+                }
+                for t in teles:
+                    t.meta["autotune"] = stamp
             telemetry = QueryTelemetry(dispatches=teles, wall_s=wall_s,
                                        compile_s=compile_s)
         return QueryResult(attrs=out, steps=steps,
@@ -455,7 +472,7 @@ class CompiledQuery:
 # the front door
 # ------------------------------------------------------------------ #
 def compile(graph: Graph, program, plan: ExecutionPlan | None = None, *,
-            mapping=None) -> CompiledQuery:
+            mapping=None, store=None) -> CompiledQuery:
     """Compile a (graph, program, plan) triple into a query session.
 
     graph   -- a `repro.graphs.csr.Graph`.
@@ -463,18 +480,32 @@ def compile(graph: Graph, program, plan: ExecutionPlan | None = None, *,
                `VertexAlgebra`, or a `Program`.
     plan    -- an `ExecutionPlan` (default `ExecutionPlan.auto()`);
                validated and resolved here, so every knob conflict
-               fails at compile time.
+               fails at compile time. With ``plan.tuned`` set (e.g.
+               `ExecutionPlan.auto(tuned=True)`), the plan autotuner
+               picks the performance knobs for this (graph, program,
+               backend) -- consulting the tuning store first, so
+               repeat compiles of the same shape are instant -- and
+               the session's `tune` holds the `TuneReport`. Tuning is
+               policy only: results stay bit-exact with the default.
     mapping -- optional FLIP `Mapping`: the placement-induced vertex
                ordering becomes block sparsity, exactly as in
                `FlipEngine.build`.
+    store   -- optional `repro.autotune.TuningStore` for tuned plans
+               (default: the `FLIP_AUTOTUNE_DB` / user-cache store).
 
     Returns a `CompiledQuery` whose `.query(srcs, warm=...)` covers
     scalar, batched, bucketed, distributed, and incremental execution
     under the one resolved plan.
     """
     prog = Program.of(program)
-    rplan = (plan if plan is not None else ExecutionPlan()).resolve(
-        prog.algebra)
+    plan = plan if plan is not None else ExecutionPlan()
+    tune = None
+    if plan.tuned:
+        plan.validate(prog.algebra)
+        from repro.autotune import resolve_tuned
+        rplan, tune = resolve_tuned(graph, prog, plan, store=store)
+    else:
+        rplan = plan.resolve(prog.algebra)
     engine = FlipEngine.build(graph, prog.algebra, mapping=mapping,
                               tile=rplan.tile, mode=rplan.mode,
                               relax_mode=rplan.relax_mode,
@@ -482,4 +513,4 @@ def compile(graph: Graph, program, plan: ExecutionPlan | None = None, *,
                               feature_dim=rplan.feature_dim)
     engine = dataclasses.replace(engine, max_steps=rplan.max_steps)
     return CompiledQuery(graph=graph, program=prog, plan=rplan,
-                         engine=engine)
+                         engine=engine, tune=tune)

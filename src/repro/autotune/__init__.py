@@ -1,0 +1,29 @@
+"""Plan autotuner: measured-cost-model design-space exploration that
+picks `ExecutionPlan` knobs per (graph, algebra, backend).
+
+Entry points:
+
+  * `autotune(graph, program)` -- one full tune, returns a `TuneReport`
+  * `ExecutionPlan.auto(tuned=True)` via `flip.compile` -- the session
+    surface; consults the `TuningStore` so tuning amortizes
+  * `tools/autotune.py` / `graph_run --autotune` -- the CLI surface
+
+Tuning is policy, never semantics: every candidate the sweep can emit
+is bit-exact with the default plan (see `repro.autotune.space`).
+"""
+from repro.autotune.measure import (Sample, analytic_step_us,
+                                    measure_plan, price_candidate)
+from repro.autotune.model import CostModel, load_bench_samples
+from repro.autotune.profile import GraphProfile, profile_graph
+from repro.autotune.space import Candidate, candidate_plans
+from repro.autotune.store import TuningStore, default_store_path
+from repro.autotune.tuner import (TuneReport, autotune, resolve_tuned)
+
+__all__ = [
+    "GraphProfile", "profile_graph",
+    "Candidate", "candidate_plans",
+    "Sample", "measure_plan", "price_candidate", "analytic_step_us",
+    "CostModel", "load_bench_samples",
+    "TuningStore", "default_store_path",
+    "TuneReport", "autotune", "resolve_tuned",
+]

@@ -1,0 +1,217 @@
+"""Candidate pricing: measured fixpoint segments, analytic fallback.
+
+Two pricing paths, one currency (microseconds per relaxation step per
+query):
+
+  * **measured** -- the ground truth. A candidate plan is built into a
+    real `FlipEngine` and driven through the engine's bounded-segment
+    surface (`run_segment`, the same yield hook the continuous-batching
+    scheduler uses): a few deterministic probe sources, a capped step
+    budget, best-of-`repeats` wall time. Segments mean a tune never
+    pays for a full fixpoint per candidate, and because segmenting is
+    exact (PR 9's bit-exactness contract) the measured steps are the
+    real steps the plan would execute.
+
+  * **analytic** -- the cycle-simulator bridge, for candidates too
+    expensive to run (interpret-mode kernels, or sweeps over graphs
+    where even a segment blows the tuning budget). The estimate reuses
+    the seed cost vocabulary of `core/sim.py` / `core/mapping.py`'s
+    `RuntimeEstimator`: per-delivery cost `t_tab + exe` cycles, work
+    proportional to the streamed block volume, converted at the arch
+    clock -- the same Algorithm-2 shape ("transfer + per-sibling
+    processing"), applied per step instead of per edge pair. Absolute
+    scale is calibrated only roughly; what the tuner needs from this
+    path is *ordinal* honesty (dense > compacted at sparse frontiers,
+    interpret >> jnp, cost grows with streamed volume), and that is
+    structural.
+
+Every sample records which path priced it (`source`), so a tuning
+report can always say *why* a knob won.
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+import time
+
+import numpy as np
+
+from repro.api.plan import ExecutionPlan
+from repro.api.program import Program
+from repro.autotune.profile import GraphProfile
+from repro.core.arch import DEFAULT_ARCH, FlipArch
+from repro.core.engine import FlipEngine
+from repro.graphs.csr import Graph
+
+# measurement defaults: a handful of sources x a short exact segment
+PROBE_SOURCES = 4
+SEGMENT_STEPS = 8
+REPEATS = 3
+
+# analytic-bridge constants (see module doc): the default instruction
+# cycles per update-carrying vertex execution (paper Sec. 3: 4/5/5 with
+# an attribute update -- each registered algebra carries its own
+# `exe_update`, which `price_candidate` threads through) and the
+# relative throughput of the kernel backends on one step's identical
+# math. interpret executes the Pallas kernel body element-by-element
+# under the interpreter -- three orders of magnitude off jnp is
+# conservative in its favor.
+EXE_UPDATE_CYCLES = 5
+BACKEND_FACTOR = {"pallas": 0.25, "jnp": 1.0, "interpret": 1000.0}
+MAC_PER_CYCLE = 64.0          # vectorized lanes per clock, jnp baseline
+STEP_FIXED_CYCLES = 2_000.0   # per-step dispatch overhead
+
+
+@dataclasses.dataclass(frozen=True)
+class Sample:
+    """One priced candidate: the tuner's unit of evidence.
+
+    `features` optionally pins the cost-model regressor vector the
+    sample was observed under -- bench-history rows come from *other*
+    graphs, so their regressors cannot be recomputed from the current
+    profile (see `repro.autotune.model`)."""
+    plan: ExecutionPlan
+    step_us: float          # microseconds per relaxation step per query
+    steps: int              # steps actually executed (measured path)
+    wall_s: float           # total harness wall (measured path)
+    source: str             # 'measured' | 'analytic'
+    features: tuple | None = None   # (1, blocks, volume) when pinned
+
+    def to_json(self) -> dict:
+        p = self.plan
+        return {"tile": p.tile, "relax_mode": p.relax_mode,
+                "compact": bool(p.compact), "batch": p.batch,
+                "mode": p.mode, "step_us": round(self.step_us, 3),
+                "steps": self.steps, "wall_s": round(self.wall_s, 6),
+                "source": self.source}
+
+
+def probe_sources(graph: Graph, seed: int,
+                  count: int = PROBE_SOURCES) -> np.ndarray:
+    """Deterministic probe sources: seeded draws without replacement
+    (the whole tune is a pure function of (graph, plan space, seed))."""
+    rng = np.random.default_rng(seed)
+    count = max(1, min(count, graph.n))
+    return np.sort(rng.choice(graph.n, size=count, replace=False)
+                   .astype(np.int64))
+
+
+def measure_plan(graph: Graph, program, plan: ExecutionPlan, *,
+                 seed: int = 0, sources: int = PROBE_SOURCES,
+                 segment_steps: int = SEGMENT_STEPS,
+                 repeats: int = REPEATS) -> Sample:
+    """Price one resolved plan by running real capped segments.
+
+    Builds the candidate's engine directly (never through
+    `flip.compile`, which could re-enter the tuner) and times
+    `run_segment` over the probe batch: one untimed segment warms the
+    executable, then each timed repeat re-enters from a fresh initial
+    state so every repeat measures the same steps. Best-of-repeats
+    guards against scheduler noise; the per-step normalization divides
+    by the steps the engine actually took (a probe that converges
+    early is priced on its real work, not its budget)."""
+    prog = Program.of(program)
+    eng = FlipEngine.build(
+        graph, prog.algebra, tile=plan.tile, mode=plan.mode,
+        relax_mode=plan.relax_mode, compact=plan.compact,
+        feature_dim=plan.feature_dim)
+    srcs = probe_sources(graph, seed, sources)
+    budgets = np.full(len(srcs), segment_steps, dtype=np.int32)
+    state0 = eng.initial_state(srcs)
+    eng.run_segment(state0, budgets)            # warm the executable
+    best, steps_total = math.inf, 1
+    for _ in range(max(1, repeats)):
+        state = eng.initial_state(srcs)
+        t0 = time.perf_counter()
+        _, steps, _ = eng.run_segment(state, budgets)
+        wall = time.perf_counter() - t0
+        if wall < best:
+            best = wall
+            steps_total = max(1, int(np.sum(steps)))
+    return Sample(plan=plan, step_us=best * 1e6 / steps_total,
+                  steps=steps_total, wall_s=best, source="measured")
+
+
+# ------------------------------------------------------------------ #
+# the cycle-sim bridge
+# ------------------------------------------------------------------ #
+def expected_blocks(n: int, m: int, tile: int) -> float:
+    """Expected non-empty (src tile, dst tile) weight blocks when m
+    edges land over the tile grid -- the occupancy of ntiles^2 cells
+    under m throws, smooth and deterministic."""
+    ntiles = max(1, -(-n // tile))
+    cells = float(ntiles * ntiles)
+    return cells * -math.expm1(m * math.log1p(-1.0 / cells)) \
+        if cells > 1 else 1.0
+
+
+def active_tile_fraction(density: float, tile: int) -> float:
+    """P(a tile holds >= 1 active vertex) at per-vertex density p --
+    the kernel's packet-trigger probability, which is what compaction
+    actually skips on."""
+    p = min(max(density, 0.0), 1.0)
+    return float(-math.expm1(tile * math.log1p(-p))) if p < 1.0 else 1.0
+
+
+def analytic_step_us(profile: GraphProfile, plan: ExecutionPlan,
+                     arch: FlipArch = DEFAULT_ARCH,
+                     exe_update: int = EXE_UPDATE_CYCLES) -> float:
+    """Per-step cost estimate for one query, in model-microseconds.
+
+    The Algorithm-2 shape from `RuntimeEstimator.edge_time`, applied
+    at block granularity: each streamed block costs its T*T*d
+    MAC-equivalents (throughput `MAC_PER_CYCLE`/cycle) plus a
+    per-delivered-row processing term (`t_tab + exe_update` cycles, the
+    sim's Intra-Table search + vertex execution), converted at the
+    arch clock and scaled by the kernel backend's relative throughput.
+    Compaction prices only the expected active blocks; dense streaming
+    prices them all -- the exact asymmetry `DispatchTelemetry.summary`
+    reports as hbm_weight_bytes_est."""
+    t, d = plan.tile, max(profile.feature_dim, 1)
+    nb = expected_blocks(profile.n, profile.m, t)
+    af = active_tile_fraction(profile.mean_density, t)
+    fetched = nb * (af if plan.compact else 1.0)
+    mac_cycles = fetched * t * t * d / MAC_PER_CYCLE
+    proc_cycles = fetched * t * (arch.t_tab + exe_update) \
+        / MAC_PER_CYCLE
+    cycles = mac_cycles + proc_cycles + STEP_FIXED_CYCLES
+    return BACKEND_FACTOR.get(plan.relax_mode, 1.0) * cycles \
+        / arch.freq_mhz
+
+
+def estimated_measure_s(profile: GraphProfile, plan: ExecutionPlan, *,
+                        sources: int = PROBE_SOURCES,
+                        segment_steps: int = SEGMENT_STEPS,
+                        repeats: int = REPEATS) -> float:
+    """Predicted wall cost of *measuring* this candidate -- what the
+    budget gate compares against before committing to a real run."""
+    per_step = analytic_step_us(profile, plan) * 1e-6
+    return per_step * segment_steps * max(1, sources) * (repeats + 1)
+
+
+def price_candidate(graph: Graph, program, plan: ExecutionPlan,
+                    profile: GraphProfile, *, measure_ok: bool = True,
+                    seed: int = 0, budget_s: float | None = None,
+                    sources: int = PROBE_SOURCES,
+                    segment_steps: int = SEGMENT_STEPS,
+                    repeats: int = REPEATS,
+                    arch: FlipArch = DEFAULT_ARCH) -> Sample:
+    """Measured when allowed and affordable, analytic otherwise. A
+    measurement that fails outright (backend error) degrades to the
+    analytic estimate rather than killing the sweep -- tuning must
+    never be the thing that takes a session down."""
+    exe = Program.of(program).algebra.exe_update
+    if measure_ok and (budget_s is None or estimated_measure_s(
+            profile, plan, sources=sources,
+            segment_steps=segment_steps, repeats=repeats) <= budget_s):
+        try:
+            return measure_plan(graph, program, plan, seed=seed,
+                                sources=sources,
+                                segment_steps=segment_steps,
+                                repeats=repeats)
+        except Exception:
+            pass
+    return Sample(plan=plan,
+                  step_us=analytic_step_us(profile, plan, arch,
+                                           exe_update=exe),
+                  steps=0, wall_s=0.0, source="analytic")

@@ -1,0 +1,124 @@
+"""The legal plan design space: every candidate the tuner may pick.
+
+One rule keeps the tuner honest: *a candidate is legal iff
+`ExecutionPlan.resolve()` accepts it*. The space enumerates the
+performance-only knobs -- tile size, kernel dispatch, frontier
+compaction, serving bucket width -- and funnels every combination
+through the exact validation the session front door applies, so a plan
+the tuner emits is a plan `flip.compile` would have accepted, with no
+second validator to drift.
+
+Knobs the space deliberately does NOT explore:
+
+  * `mode` ('data' vs 'op') and `warm` are kept at the base plan's
+    setting: both are *policy contracts* with the caller ('op' is the
+    classic-CGRA baseline the user asked to see; `warm` decides which
+    `query(warm=)` calls error), so flipping them behind the caller's
+    back would change observable behavior, not just speed.
+  * `distributed` / `mesh`: mesh topology is an infrastructure choice,
+    not a per-graph knob.
+  * `feature_dim`: the program's native width is semantics.
+
+And one knob restriction that keeps "bit-exact" honest: `tile` and
+`relax_mode` only vary when the algebra's ⊕ is *idempotent* (min / max
+/ or). Re-tiling regroups the per-destination reduction, and the jnp
+matmul vs interpret loop reassociate it differently -- bitwise inert
+for an idempotent merge, a few-ulp drift for a non-idempotent one
+(pagerank / labelprop's float +). For those algebras the sweep varies
+only `compact` and `batch`, the two knobs whose exactness is
+unconditional (compaction streams a subset of blocks, bucketing only
+pads), so every candidate -- for every algebra -- stays bit-for-bit
+the default plan's answer.
+
+Candidates carry a `measured` hint: 'interpret' runs the Pallas kernel
+body under the interpreter (orders of magnitude slower than jnp -- it
+exists for kernel-exactness checks, not production), so sweeping it
+with a wall-clock harness would dominate the whole tune; the tuner
+prices it through the analytic model instead.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+
+from repro.api.plan import ExecutionPlan
+
+TILES = (64, 128, 256)
+
+
+@dataclasses.dataclass(frozen=True)
+class Candidate:
+    """One legal plan plus how the tuner may price it."""
+    plan: ExecutionPlan          # resolved (no 'auto' left)
+    measure_ok: bool             # False: analytic/model pricing only
+
+    @property
+    def key(self) -> tuple:
+        return self.plan.key()
+
+
+def _relax_candidates(backend: str) -> list[tuple[str, bool]]:
+    """(relax_mode, measure_ok) pairs legal on `backend`. jnp is legal
+    everywhere; pallas only compiles on TPU; interpret is legal
+    everywhere but priced analytically (see module doc)."""
+    out = [("jnp", True)]
+    if backend == "tpu":
+        out.append(("pallas", True))
+    out.append(("interpret", False))
+    return out
+
+
+def _batch_candidates(base_batch: int) -> tuple[int, ...]:
+    """Bucket widths around the base plan's serving batch: a solo plan
+    (batch=0) stays solo -- bucketing a caller who asked for one
+    fixpoint changes dispatch shape for no measured reason -- while a
+    serving plan explores halving/doubling its bucket."""
+    if base_batch <= 0:
+        return (0,)
+    return tuple(sorted({max(1, base_batch // 2), base_batch,
+                         base_batch * 2}))
+
+
+def candidate_plans(base: ExecutionPlan, algebra=None,
+                    backend: str | None = None) -> list[Candidate]:
+    """Enumerate the legal candidates around `base` (see module doc).
+
+    Every returned candidate has passed `ExecutionPlan.resolve(algebra)`
+    -- combinations the validator rejects (compact=True with mode='op',
+    pallas off-TPU, ...) are silently skipped, so the sweep can propose
+    aggressively and let the one true validator prune. The base plan's
+    own resolved form is always in the list: the tuner can therefore
+    never pick something *worse than* the static default by
+    construction of its argmin."""
+    backend = backend or jax.default_backend()
+    seen: set[tuple] = set()
+    out: list[Candidate] = []
+    exact_regroup = (algebra is None
+                     or algebra.semiring.idempotent)
+    tiles = TILES if exact_regroup else (base.tile,)
+    relaxes = (_relax_candidates(backend) if exact_regroup
+               else [(base.relax_mode,
+                      base.relax_mode != "interpret")])
+    combos = [(t, r, mok, c, b)
+              for t in tiles
+              for (r, mok) in relaxes
+              for c in (True, False)
+              for b in _batch_candidates(base.batch)]
+    # the static default (base as-is) leads the list so ties break to it
+    probes = [(base, True)] + [
+        (dataclasses.replace(base, tile=t, relax_mode=r, compact=c,
+                             batch=b, tuned=False), mok)
+        for (t, r, mok, c, b) in combos]
+    for plan, measure_ok in probes:
+        try:
+            resolved = dataclasses.replace(plan, tuned=False).resolve(
+                algebra)
+        except (ValueError, TypeError):
+            continue
+        k = resolved.key()
+        if k in seen:
+            continue
+        seen.add(k)
+        out.append(Candidate(plan=resolved, measure_ok=measure_ok))
+    return out

@@ -1,0 +1,188 @@
+"""The tuner: profile -> sweep -> price -> model -> chosen plan.
+
+`autotune(graph, program)` is the whole subsystem in one call:
+
+  1. profile the graph (`repro.autotune.profile`) and look the
+     fingerprint up in the tuning store -- a hit returns instantly
+     (tuning amortizes across sessions);
+  2. enumerate the legal candidate plans around the caller's base plan
+     (`repro.autotune.space`);
+  3. price every candidate (`repro.autotune.measure`): real capped
+     `run_segment` timings where allowed and affordable, the analytic
+     cycle-sim bridge otherwise;
+  4. fit the cost model over the measured samples plus recorded bench
+     history (`repro.autotune.model`) and use it to price the
+     analytic-only candidates;
+  5. pick the argmin -- with a deterministic tie-break: any candidate
+     within `NOISE_BAND` of the best loses to the *earlier* candidate
+     in sweep order, and the sweep puts the caller's base plan first.
+     A tuned plan therefore only deviates from the static default when
+     the evidence clears the noise floor, and the same
+     (graph, program, base, seed) always tunes to the same plan in
+     model-only mode (`measure=False`).
+
+The chosen plan is pure policy: every candidate the sweep can emit
+differs from the default only in tile / kernel dispatch / compaction /
+bucket width, all bit-exact by the engine's contracts, so tuning can
+change *when* the answer arrives but never *what* it is.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+from repro.api.plan import ExecutionPlan
+from repro.api.program import Program
+from repro.autotune.measure import (PROBE_SOURCES, SEGMENT_STEPS, Sample,
+                                    price_candidate)
+from repro.autotune.model import CostModel, load_bench_samples
+from repro.autotune.profile import GraphProfile, profile_graph
+from repro.autotune.space import Candidate, candidate_plans
+from repro.autotune.store import TuningStore
+from repro.graphs.csr import Graph
+
+# ties within this relative band break toward the earlier (= more
+# default) candidate: a 2% win is measurement noise, not evidence
+NOISE_BAND = 0.02
+# default wall budget for the whole measured sweep's per-candidate gate
+DEFAULT_BUDGET_S = 2.0
+
+TUNED_KNOBS = ("tile", "relax_mode", "compact", "batch")
+
+
+@dataclasses.dataclass
+class TuneReport:
+    """One tuning outcome: what was chosen, from what evidence, why."""
+
+    profile: GraphProfile
+    chosen: ExecutionPlan          # resolved; tuned flag cleared
+    samples: list                  # [Sample] -- empty on a store hit
+    why: str
+    cached: bool                   # True: served from the store
+    seed: int
+    scores: dict = dataclasses.field(default_factory=dict)
+
+    def to_json(self) -> dict:
+        return {
+            "profile": self.profile.to_json(),
+            "chosen": {k: getattr(self.chosen, k) for k in TUNED_KNOBS},
+            "samples": [s.to_json() for s in self.samples],
+            "why": self.why, "cached": self.cached, "seed": self.seed,
+        }
+
+
+def _knobs_of(plan: ExecutionPlan) -> dict:
+    return {k: getattr(plan, k) for k in TUNED_KNOBS}
+
+
+def _plan_from_knobs(base: ExecutionPlan, knobs: dict, algebra) \
+        -> ExecutionPlan | None:
+    """Rehydrate a stored knob dict onto the caller's base plan --
+    tunable knobs only, so a stored entry can never smuggle in a
+    semantics change. None when the stored combo no longer resolves
+    (e.g. a pallas entry replayed off-TPU): stale-by-environment is
+    just another cache miss."""
+    clean = {k: knobs[k] for k in TUNED_KNOBS if k in knobs}
+    try:
+        return dataclasses.replace(base, tuned=False, **clean) \
+            .resolve(algebra)
+    except (ValueError, TypeError, KeyError):
+        return None
+
+
+def _score_table(cands: list[Candidate], samples: list[Sample],
+                 model: CostModel, profile: GraphProfile) -> list[float]:
+    """Per-candidate cost in step-us: measured candidates score their
+    own measurement; analytic-priced ones go through the fitted model
+    (which itself falls back to the analytic bridge for backends the
+    fit never saw)."""
+    out = []
+    for c, s in zip(cands, samples):
+        if s.source == "measured":
+            out.append(float(s.step_us))
+        else:
+            out.append(float(model.predict(profile, c.plan)))
+    return out
+
+
+def autotune(graph: Graph, program,
+             base_plan: ExecutionPlan | None = None, *, seed: int = 0,
+             store: TuningStore | None = None, force: bool = False,
+             measure: bool = True,
+             budget_s: float | None = DEFAULT_BUDGET_S,
+             segment_steps: int = SEGMENT_STEPS,
+             sources: int = PROBE_SOURCES,
+             bench_history: bool = True) -> TuneReport:
+    """Tune the ExecutionPlan knobs for (graph, program) -- module doc.
+
+    measure=False runs the whole sweep through the analytic model: no
+    wall clocks anywhere, so the chosen plan is a pure deterministic
+    function of (graph shape, base plan, seed). `force=True` bypasses
+    the store on read (the fresh result is still written back).
+    """
+    prog = Program.of(program)
+    base = base_plan if base_plan is not None else ExecutionPlan()
+    rbase = dataclasses.replace(base, tuned=False).resolve(prog.algebra)
+    profile = profile_graph(graph, feature_dim=rbase.feature_dim)
+    fp = profile.fingerprint()
+    algebra_name = prog.algebra.name
+
+    if store is not None and not force:
+        entry = store.get(fp, algebra_name, profile.backend)
+        if entry is not None:
+            plan = _plan_from_knobs(rbase, entry["plan"], prog.algebra)
+            if plan is not None:
+                return TuneReport(
+                    profile=profile, chosen=plan, samples=[],
+                    why=entry.get("why", "") or "store hit",
+                    cached=True, seed=int(entry.get("seed", seed)))
+
+    cands = candidate_plans(rbase, prog.algebra, backend=profile.backend)
+    samples = [
+        price_candidate(graph, prog, c.plan, profile,
+                        measure_ok=(measure and c.measure_ok),
+                        seed=seed, budget_s=budget_s, sources=sources,
+                        segment_steps=segment_steps)
+        for c in cands]
+    history = load_bench_samples() if bench_history else []
+    model = CostModel.fit(samples + history, profile)
+    scores = _score_table(cands, samples, model, profile)
+
+    # argmin with the noise-band tie-break: the first candidate within
+    # NOISE_BAND of the minimum wins, and sweep order puts the base
+    # plan first -- so "barely better" never displaces the default
+    best = min(scores)
+    idx = next(i for i, s in enumerate(scores)
+               if s <= best * (1.0 + NOISE_BAND))
+    chosen, csample = cands[idx].plan, samples[idx]
+    base_score = scores[0]
+    why = (
+        f"{csample.source} sweep over {len(cands)} candidates: "
+        f"tile={chosen.tile} relax={chosen.relax_mode} "
+        f"compact={chosen.compact} batch={chosen.batch} at "
+        f"{scores[idx]:.1f}us/step vs default {base_score:.1f}us/step "
+        f"(model fit on {model.n_samples} samples)")
+    report = TuneReport(
+        profile=profile, chosen=chosen, samples=samples, why=why,
+        cached=False, seed=seed,
+        scores={c.plan.key(): s for c, s in zip(cands, scores)})
+    if store is not None:
+        store.put(fp, algebra_name, profile.backend, _knobs_of(chosen),
+                  score_us=scores[idx], seed=seed,
+                  samples=[s.to_json() for s in samples],
+                  profile_json=profile.to_json(), why=why)
+    return report
+
+
+def resolve_tuned(graph: Graph, program, plan: ExecutionPlan, *,
+                  store: TuningStore | None = None,
+                  seed: int = 0) -> tuple[ExecutionPlan, TuneReport]:
+    """The session hook: collapse a ``tuned=True`` plan to its tuned
+    concrete form. Consults the default store when none is given (so
+    `flip.compile(..., ExecutionPlan.auto(tuned=True))` amortizes
+    across sessions), returns the resolved chosen plan (tuned flag
+    cleared) plus the report the session stamps into telemetry."""
+    if store is None:
+        store = TuningStore()
+    report = autotune(graph, program, base_plan=plan, seed=seed,
+                      store=store)
+    return report.chosen, report

@@ -29,6 +29,7 @@ Examples:
 from __future__ import annotations
 
 import argparse
+import dataclasses
 import json
 import time
 
@@ -75,6 +76,12 @@ def main():
                          "each batch is re-solved incrementally (warm "
                          "start when monotone under the algebra, full "
                          "recompute otherwise). jax/dist engines only.")
+    ap.add_argument("--autotune", action="store_true",
+                    help="let the plan autotuner pick the performance "
+                         "knobs (tile / kernel / compaction / bucket) "
+                         "for this graph, consulting the tuning store "
+                         "(FLIP_AUTOTUNE_DB). jax engine only; "
+                         "bit-exact with the untuned plan")
     ap.add_argument("--effort", type=int, default=1)
     ap.add_argument("--trace", default=None, metavar="FILE",
                     help="write a Chrome-trace JSON (chrome://tracing / "
@@ -109,6 +116,10 @@ def main():
         raise SystemExit("--trace traces one query/fixpoint; drop "
                          "--batch (use serve_graph --stats for serving "
                          "telemetry)")
+    if args.autotune and args.engine != "jax":
+        raise SystemExit("--autotune tunes the single-device jax plan "
+                         "(sim has no ExecutionPlan; the distributed "
+                         "fixpoint is not tunable) -- use --engine jax")
     if args.engine == "sim" and (args.feature_dim > 1
                                  or PROGRAMS[args.algo].feature_dim > 1):
         raise SystemExit("--engine sim runs scalar vertex state only; "
@@ -155,10 +166,12 @@ def main():
             print(f"[graph] speedup vs MCU {mcu.time_us / t_f:.1f}x, "
                   f"vs op-centric CGRA {cgra.time_us / t_f:.1f}x")
     else:
-        plan = flip.plan_from_cli(args.engine, args.mode,
-                                  compact=args.compact,
-                                  feature_dim=args.feature_dim)
+        plan = _cli_plan(args)
         cq = flip.compile(g, args.algo, plan, mapping=mapping)
+        if cq.tune is not None:
+            print(f"[graph] autotune"
+                  f"{' (store hit)' if cq.tune.cached else ''}: "
+                  f"{cq.tune.why}")
         t0 = time.time()
         res = cq.query(args.src, trace=bool(args.trace))
         attrs = res.attrs
@@ -175,6 +188,17 @@ def main():
     ref, _ = reference.run(args.algo, g, args.src)
     print(f"[graph] correct vs reference: "
           f"{PROGRAMS[args.algo].results_match(attrs, ref)}")
+
+
+def _cli_plan(args, **kw):
+    """Fold the CLI knobs into one plan; --autotune sets the tuned flag
+    so `flip.compile` routes through the plan autotuner."""
+    plan = flip.plan_from_cli(args.engine, args.mode,
+                              compact=args.compact,
+                              feature_dim=args.feature_dim, **kw)
+    if args.autotune:
+        plan = dataclasses.replace(plan, tuned=True)
+    return plan
 
 
 def _write_trace(path, res, algo):
@@ -239,10 +263,7 @@ def _run_batched(args, g, mapping, srcs) -> bool:
     t0 = time.time()
     if args.batch:
         from repro.launch.serve_graph import GraphServer
-        plan = flip.plan_from_cli(args.engine, args.mode,
-                                  compact=args.compact,
-                                  batch=args.batch,
-                                  feature_dim=args.feature_dim)
+        plan = _cli_plan(args, batch=args.batch)
         srv = GraphServer(g, plan=plan, mapping=mapping)
         reqs = srv.serve((args.algo, s) for s in srcs)
         outs = [r.result for r in reqs]
@@ -250,9 +271,7 @@ def _run_batched(args, g, mapping, srcs) -> bool:
         how = (f"{srv.dispatches} serving dispatches of "
                f"B={args.batch}")
     else:
-        plan = flip.plan_from_cli(args.engine, args.mode,
-                                  compact=args.compact,
-                                  feature_dim=args.feature_dim)
+        plan = _cli_plan(args)
         res = flip.compile(g, args.algo, plan, mapping=mapping).query(
             np.asarray(srcs), trace=bool(args.trace))
         outs, steps = res.attrs, res.steps

@@ -1,0 +1,456 @@
+"""Plan-autotuner suite: determinism, legality, bit-exactness, store.
+
+The tuner's contract has four load-bearing faces, each with its own
+test group here:
+
+  * determinism -- the same (graph, program, base, seed) tunes to the
+    same plan in model-only mode, and the profile fingerprint is a
+    stable content hash (same shape = same key, any change = new key);
+  * legality -- every candidate the sweep can emit has already passed
+    `ExecutionPlan.resolve()`, base plan first;
+  * bit-exactness -- tuning is policy, never semantics: a tuned
+    session's attrs are bit-for-bit the default session's, across all
+    scalar algebras, a vector algebra, and both CPU kernel dispatches;
+  * store -- entries round-trip, stale fingerprints / schema drift /
+    corrupt files are all misses, writes are atomic.
+"""
+import dataclasses
+import json
+import os
+
+import numpy as np
+import pytest
+
+from conftest import ALGOS, VEC_ALGOS, assert_close, oracle
+
+import flip
+from repro.api.plan import ExecutionPlan
+from repro.autotune import (CostModel, Sample, TuningStore,
+                            analytic_step_us, autotune, candidate_plans,
+                            load_bench_samples, measure_plan,
+                            price_candidate, profile_graph,
+                            resolve_tuned)
+from repro.autotune import store as store_mod
+from repro.autotune.model import features_of
+from repro.autotune.profile import DEGREE_BUCKETS, PROBE_STEPS
+from repro.graphs import make_power_law, make_road_network
+
+
+@pytest.fixture
+def g():
+    return make_power_law(256, 768, seed=0)
+
+
+@pytest.fixture
+def tmp_store(tmp_path):
+    return TuningStore(str(tmp_path / "autotune.json"))
+
+
+# ------------------------------------------------------------------ #
+# profile
+# ------------------------------------------------------------------ #
+class TestProfile:
+    def test_shape_fields(self, g):
+        p = profile_graph(g, feature_dim=1, backend="cpu",
+                          device_kind="cpu")
+        assert (p.n, p.m) == (g.n, g.m)
+        assert len(p.degree_hist) == DEGREE_BUCKETS
+        assert sum(p.degree_hist) == g.n
+        assert 0 < len(p.density_trajectory) <= PROBE_STEPS
+        assert all(0.0 <= x <= 1.0 for x in p.density_trajectory)
+        assert 0.0 < p.mean_density <= p.peak_density <= 1.0
+
+    def test_fingerprint_stable_and_sensitive(self, g):
+        kw = dict(feature_dim=1, backend="cpu", device_kind="cpu")
+        fp = profile_graph(g, **kw).fingerprint()
+        # same shape -> same key (profiled twice)
+        assert profile_graph(g, **kw).fingerprint() == fp
+        # any input change -> new key
+        assert profile_graph(make_power_law(256, 768, seed=1),
+                             **kw).fingerprint() != fp
+        assert profile_graph(g, feature_dim=8, backend="cpu",
+                             device_kind="cpu").fingerprint() != fp
+        assert profile_graph(g, feature_dim=1, backend="tpu",
+                             device_kind="TPU v4").fingerprint() != fp
+
+    def test_trajectory_separates_topologies(self):
+        """A hub-heavy power-law graph densifies faster than a road
+        network -- that separation is the whole point of probing."""
+        pl = profile_graph(make_power_law(512, 2048, seed=0),
+                           backend="cpu", device_kind="cpu")
+        rd = profile_graph(make_road_network(512, seed=0),
+                           backend="cpu", device_kind="cpu")
+        assert pl.peak_density > rd.peak_density
+
+    def test_empty_graph(self):
+        from repro.graphs.csr import Graph
+        g0 = Graph.from_edges(0, [])
+        p = profile_graph(g0, backend="cpu", device_kind="cpu")
+        assert p.density_trajectory == ()
+        assert p.mean_density == 1.0
+        assert p.fingerprint()
+
+    def test_to_json_roundtrips_fingerprint(self, g):
+        p = profile_graph(g, backend="cpu", device_kind="cpu")
+        j = json.loads(json.dumps(p.to_json()))
+        assert j["fingerprint"] == p.fingerprint()
+        assert j["n"] == g.n
+
+
+# ------------------------------------------------------------------ #
+# space
+# ------------------------------------------------------------------ #
+class TestSpace:
+    def test_every_candidate_resolves(self, g):
+        """The sweep's legality invariant: resolve() accepts every
+        emitted candidate (resolve is idempotent on resolved plans)."""
+        base = ExecutionPlan().resolve()
+        for c in candidate_plans(base, backend="cpu"):
+            r = c.plan.resolve()
+            assert r.key() == c.plan.key()
+            assert r.relax_mode != "auto" and r.compact in (True, False)
+            assert not r.tuned
+
+    def test_base_plan_leads(self, g):
+        base = ExecutionPlan(tile=128).resolve()
+        cands = candidate_plans(base, backend="cpu")
+        assert cands[0].plan.key() == base.key()
+
+    def test_illegal_combos_pruned(self):
+        # op mode: compact=True is rejected by the validator, so the
+        # space must only emit compact=False op candidates
+        base = ExecutionPlan(mode="op", compact=False).resolve()
+        cands = candidate_plans(base, backend="cpu")
+        assert cands
+        assert all(not c.plan.compact for c in cands)
+        # pallas is TPU-only: never emitted for a cpu backend
+        assert all(c.plan.relax_mode != "pallas" for c in cands)
+
+    def test_semantic_knobs_never_vary(self):
+        base = ExecutionPlan(mode="op", compact=False, warm="never",
+                             feature_dim=4).resolve()
+        for c in candidate_plans(base, backend="cpu"):
+            assert c.plan.mode == "op"
+            assert c.plan.warm == "never"
+            assert c.plan.feature_dim == 4
+
+    def test_non_idempotent_algebra_freezes_regrouping_knobs(self):
+        """pagerank/labelprop's float + reassociates under re-tiling
+        and dispatch swaps: for those algebras the sweep must hold
+        tile/relax_mode at base and vary only compact/batch."""
+        from repro.algebra import ALGEBRAS
+        alg = ALGEBRAS["pagerank"]
+        base = ExecutionPlan().resolve(alg)
+        cands = candidate_plans(base, alg, backend="cpu")
+        assert {c.plan.tile for c in cands} == {base.tile}
+        assert {c.plan.relax_mode for c in cands} == {base.relax_mode}
+        assert {c.plan.compact for c in cands} == {True, False}
+
+    def test_interpret_is_analytic_only(self):
+        cands = candidate_plans(ExecutionPlan().resolve(),
+                                backend="cpu")
+        by_mode = {c.plan.relax_mode: c.measure_ok for c in cands}
+        assert by_mode["jnp"] is True
+        assert by_mode["interpret"] is False
+
+    def test_batch_candidates_follow_base(self):
+        solo = candidate_plans(ExecutionPlan().resolve(), backend="cpu")
+        assert {c.plan.batch for c in solo} == {0}
+        served = candidate_plans(ExecutionPlan(batch=8).resolve(),
+                                 backend="cpu")
+        assert {c.plan.batch for c in served} == {4, 8, 16}
+
+
+# ------------------------------------------------------------------ #
+# measure + model
+# ------------------------------------------------------------------ #
+class TestPricing:
+    def test_measured_sample(self, g):
+        plan = ExecutionPlan(tile=64).resolve()
+        s = measure_plan(g, "bfs", plan, seed=0, repeats=1,
+                         segment_steps=4)
+        assert s.source == "measured"
+        assert s.step_us > 0 and s.steps > 0 and s.wall_s > 0
+        assert s.to_json()["tile"] == 64
+
+    def test_analytic_ordering(self, g):
+        """The bridge's ordinal contract: interpret >> jnp, and dense
+        streaming >= compacted at a sparse frontier."""
+        p = dataclasses.replace(
+            profile_graph(g, backend="cpu", device_kind="cpu"),
+            density_trajectory=(0.01,))
+        base = ExecutionPlan().resolve()
+        jnp_c = analytic_step_us(p, base)
+        interp = analytic_step_us(
+            p, dataclasses.replace(base, relax_mode="interpret"))
+        dense = analytic_step_us(
+            p, dataclasses.replace(base, compact=False))
+        assert interp > 100 * jnp_c
+        assert dense >= jnp_c
+
+    def test_budget_gate_falls_back_to_analytic(self, g):
+        p = profile_graph(g, backend="cpu", device_kind="cpu")
+        s = price_candidate(g, "bfs", ExecutionPlan().resolve(), p,
+                            measure_ok=True, budget_s=0.0)
+        assert s.source == "analytic"
+        assert s.step_us == pytest.approx(
+            analytic_step_us(p, ExecutionPlan().resolve()))
+
+    def test_model_fit_and_predict(self, g):
+        p = profile_graph(g, backend="cpu", device_kind="cpu")
+        base = ExecutionPlan().resolve()
+        # synthesize a perfectly linear backend so the fit is checkable
+        plans = [dataclasses.replace(base, tile=t, compact=c)
+                 for t in (64, 128, 256) for c in (True, False)]
+        true_coef = np.array([5.0, 2.0, 1e-4])
+        samples = [
+            Sample(plan=pl,
+                   step_us=float(features_of(p, pl) @ true_coef),
+                   steps=4, wall_s=1e-3, source="measured")
+            for pl in plans]
+        model = CostModel.fit(samples, p)
+        assert model.n_samples == len(samples)
+        got = model.predict(p, plans[0])
+        assert got == pytest.approx(samples[0].step_us, rel=1e-6)
+        # a backend the fit never saw falls back to the analytic bridge
+        interp = dataclasses.replace(base, relax_mode="interpret")
+        assert model.predict(p, interp) == pytest.approx(
+            analytic_step_us(p, interp))
+
+    def test_fit_excludes_analytic_samples(self, g):
+        p = profile_graph(g, backend="cpu", device_kind="cpu")
+        base = ExecutionPlan().resolve()
+        samples = [Sample(plan=base, step_us=1.0, steps=0, wall_s=0.0,
+                          source="analytic")] * 5
+        assert CostModel.fit(samples, p).coef == {}
+
+    def test_load_bench_samples(self, tmp_path):
+        path = tmp_path / "BENCH_x.json"
+        path.write_text(json.dumps({"tag": "x", "runs": [{"rows": [
+            {"name": "feature_step_min_plus_2k_d8", "us_per_call": 512.3,
+             "derived": "power-law |V|=2048 blocks=519 d=8"},
+            {"name": "frontier_step_dense_1pct", "us_per_call": 80.0,
+             "derived": "power-law |V|=2048 blocks=519"},
+            {"name": "not_a_step_row", "us_per_call": 3.0,
+             "derived": "blocks=9"},
+            {"name": "feature_step_no_blocks", "us_per_call": 3.0,
+             "derived": "d=8"},
+        ]}]}))
+        samples = load_bench_samples([str(path)])
+        assert len(samples) == 2
+        assert all(s.source == "measured" and s.features is not None
+                   for s in samples)
+        assert samples[0].features[1] == 519
+        # missing / corrupt files contribute nothing, never raise
+        assert load_bench_samples([str(tmp_path / "nope.json")]) == []
+        bad = tmp_path / "BENCH_bad.json"
+        bad.write_text("{corrupt")
+        assert load_bench_samples([str(bad)]) == []
+
+
+# ------------------------------------------------------------------ #
+# tuner: determinism + selection
+# ------------------------------------------------------------------ #
+class TestTuner:
+    def test_model_only_tune_is_deterministic(self, g, tmp_path):
+        """Same profile + same seed -> identical chosen plan. Two
+        independent tunes, separate stores, no wall clocks anywhere."""
+        reports = [
+            autotune(g, "bfs", seed=7,
+                     store=TuningStore(str(tmp_path / f"s{i}.json")),
+                     measure=False, bench_history=False)
+            for i in range(2)]
+        assert reports[0].chosen.key() == reports[1].chosen.key()
+        assert [s.to_json() for s in reports[0].samples] == \
+               [s.to_json() for s in reports[1].samples]
+        assert not reports[0].cached and reports[0].samples
+
+    def test_chosen_is_argmin_with_default_tiebreak(self, g, tmp_store):
+        rep = autotune(g, "bfs", store=tmp_store, measure=False,
+                       bench_history=False)
+        scores = list(rep.scores.values())
+        best = min(scores)
+        assert rep.scores[rep.chosen.key()] <= best * 1.02
+        # every candidate in the table resolved (keys are resolved keys)
+        assert len(rep.scores) == len(rep.samples)
+
+    def test_store_hit_roundtrip(self, g, tmp_store):
+        rep1 = autotune(g, "bfs", store=tmp_store, measure=False)
+        rep2 = autotune(g, "bfs", store=tmp_store, measure=False)
+        assert not rep1.cached and rep2.cached
+        assert rep2.chosen.key() == rep1.chosen.key()
+        assert rep2.samples == []
+        # force re-sweeps anyway
+        rep3 = autotune(g, "bfs", store=tmp_store, measure=False,
+                        force=True)
+        assert not rep3.cached and rep3.samples
+
+    def test_tune_report_json(self, g, tmp_store):
+        rep = autotune(g, "bfs", store=tmp_store, measure=False)
+        j = json.loads(json.dumps(rep.to_json()))
+        assert j["chosen"]["tile"] in (64, 128, 256)
+        assert j["why"] and not j["cached"]
+
+    def test_resolve_tuned_clears_flag(self, g, tmp_store):
+        plan, rep = resolve_tuned(
+            g, "bfs", ExecutionPlan.auto(tuned=True), store=tmp_store)
+        assert not plan.tuned
+        assert plan.key() == rep.chosen.key()
+        assert plan.relax_mode in ("jnp", "interpret")
+
+
+# ------------------------------------------------------------------ #
+# bit-exactness: tuning is policy, never semantics
+# ------------------------------------------------------------------ #
+class TestBitExact:
+    @pytest.mark.parametrize("algo", ALGOS)
+    def test_scalar_algebras(self, algo, g, tmp_store):
+        """Tuned session attrs == default session attrs, bit for bit,
+        and both match the oracle."""
+        cq_tuned = flip.compile(g, algo,
+                                ExecutionPlan.auto(tuned=True),
+                                store=tmp_store)
+        cq_def = flip.compile(g, algo)
+        rt = cq_tuned.query(3)
+        rd = cq_def.query(3)
+        np.testing.assert_array_equal(np.asarray(rt.attrs),
+                                      np.asarray(rd.attrs))
+        assert_close(rt.attrs, oracle(algo, g, 3), algo)
+
+    @pytest.mark.parametrize("algo", VEC_ALGOS[:1])
+    def test_vector_algebra(self, algo, g, tmp_store):
+        cq_tuned = flip.compile(g, algo,
+                                ExecutionPlan.auto(tuned=True),
+                                store=tmp_store)
+        rt = cq_tuned.query(3)
+        rd = flip.compile(g, algo).query(3)
+        np.testing.assert_array_equal(np.asarray(rt.attrs),
+                                      np.asarray(rd.attrs))
+        assert cq_tuned.plan.feature_dim > 1
+
+    @pytest.mark.parametrize("relax", ["jnp", "interpret"])
+    def test_every_candidate_matches_default(self, relax, g):
+        """Not just the chosen plan: every plan the space can emit at
+        this dispatch mode is bit-exact with the default."""
+        r0 = flip.compile(g, "bfs").query(5)
+        cands = [c for c in candidate_plans(ExecutionPlan().resolve(),
+                                            backend="cpu")
+                 if c.plan.relax_mode == relax]
+        assert cands
+        # interpret is ~1000x slower: one candidate proves the point
+        for c in (cands if relax == "jnp" else cands[:1]):
+            r = flip.compile(g, "bfs", c.plan).query(5)
+            np.testing.assert_array_equal(
+                np.asarray(r.attrs), np.asarray(r0.attrs),
+                err_msg=str(c.plan.key()))
+
+    def test_batched_tuned_session(self, g, tmp_store):
+        base = ExecutionPlan.auto(tuned=True, batch=4)
+        cq = flip.compile(g, "sssp", base, store=tmp_store)
+        srcs = np.array([3, 11, 0, 27, 42, 8])
+        rt = cq.query(srcs)
+        rd = flip.compile(g, "sssp").query(srcs)
+        np.testing.assert_array_equal(np.asarray(rt.attrs),
+                                      np.asarray(rd.attrs))
+
+    def test_telemetry_carries_tuner_provenance(self, g, tmp_store):
+        cq = flip.compile(g, "bfs", ExecutionPlan.auto(tuned=True),
+                          store=tmp_store)
+        r = cq.query(3, trace=True)
+        meta = r.telemetry.dispatches[0].meta["autotune"]
+        assert meta["chosen"]["tile"] == cq.plan.tile
+        assert meta["why"] == cq.tune.why
+        assert meta["fingerprint"] == cq.tune.profile.fingerprint()
+        # untuned sessions stamp nothing
+        r0 = flip.compile(g, "bfs").query(3, trace=True)
+        assert "autotune" not in r0.telemetry.dispatches[0].meta
+
+
+# ------------------------------------------------------------------ #
+# store
+# ------------------------------------------------------------------ #
+class TestStore:
+    def test_roundtrip(self, tmp_store):
+        e = tmp_store.put("fp1", "bfs", "cpu",
+                          {"tile": 256, "relax_mode": "jnp",
+                           "compact": True, "batch": 0},
+                          score_us=12.5, seed=3, why="test")
+        got = tmp_store.get("fp1", "bfs", "cpu")
+        assert got["plan"]["tile"] == 256
+        assert got["seed"] == 3 and got["why"] == "test"
+        assert e["schema"] == store_mod.SCHEMA
+        assert len(tmp_store) == 1
+
+    def test_stale_fingerprint_rejected(self, tmp_store):
+        tmp_store.put("fp1", "bfs", "cpu", {"tile": 64},
+                      score_us=1.0, seed=0)
+        assert tmp_store.get("fp2", "bfs", "cpu") is None
+        assert tmp_store.get("fp1", "sssp", "cpu") is None
+        assert tmp_store.get("fp1", "bfs", "tpu") is None
+
+    def test_schema_drift_rejected(self, tmp_store):
+        tmp_store.put("fp1", "bfs", "cpu", {"tile": 64},
+                      score_us=1.0, seed=0)
+        with open(tmp_store.path) as f:
+            data = json.load(f)
+        key = TuningStore.key("fp1", "bfs", "cpu")
+        data["entries"][key]["schema"] = store_mod.SCHEMA + 1
+        with open(tmp_store.path, "w") as f:
+            json.dump(data, f)
+        assert tmp_store.get("fp1", "bfs", "cpu") is None
+
+    def test_corrupt_store_is_empty(self, tmp_path):
+        p = tmp_path / "db.json"
+        p.write_text("{not json")
+        s = TuningStore(str(p))
+        assert len(s) == 0
+        assert s.get("fp", "bfs", "cpu") is None
+        # and a put over the corpse rewrites cleanly
+        s.put("fp", "bfs", "cpu", {"tile": 64}, score_us=1.0, seed=0)
+        assert s.get("fp", "bfs", "cpu") is not None
+
+    def test_default_path_env(self, tmp_path, monkeypatch):
+        monkeypatch.setenv("FLIP_AUTOTUNE_DB", str(tmp_path / "e.json"))
+        assert TuningStore().path == str(tmp_path / "e.json")
+        monkeypatch.delenv("FLIP_AUTOTUNE_DB")
+        assert TuningStore().path.endswith(
+            os.path.join(".cache", "flip", "autotune.json"))
+
+    def test_stored_knobs_cannot_change_semantics(self, g, tmp_store):
+        """A stored entry rehydrates performance knobs only: a
+        hand-edited entry with extra keys cannot flip mode/warm, and a
+        combo that no longer resolves falls back to a fresh sweep."""
+        p = profile_graph(g, backend="cpu", device_kind="cpu")
+        fp = p.fingerprint()
+        tmp_store.put(fp, "bfs", "cpu",
+                      {"tile": 64, "relax_mode": "jnp", "compact": True,
+                       "batch": 0, "mode": "op", "warm": "never"},
+                      score_us=1.0, seed=0)
+        rep = autotune(g, "bfs", store=tmp_store, measure=False)
+        assert rep.cached
+        assert rep.chosen.mode == "data"      # smuggled key ignored
+        assert rep.chosen.warm == "auto"
+        # a stored combo the validator now rejects = miss, fresh sweep
+        tmp_store.put(fp, "bfs", "cpu",
+                      {"tile": 64, "relax_mode": "pallas"},
+                      score_us=1.0, seed=0)
+        rep2 = autotune(g, "bfs", store=tmp_store, measure=False)
+        assert not rep2.cached and rep2.samples
+
+
+# ------------------------------------------------------------------ #
+# plan surface
+# ------------------------------------------------------------------ #
+class TestPlanSurface:
+    def test_tuned_flag_validation(self):
+        with pytest.raises(ValueError, match="tuned"):
+            ExecutionPlan(tuned="yes").validate()
+        with pytest.raises(ValueError, match="distributed"):
+            ExecutionPlan(tuned=True, distributed=True).validate()
+
+    def test_resolve_leaves_tuned_in_place(self):
+        # resolve() alone has no graph to tune against
+        assert ExecutionPlan(tuned=True).resolve().tuned
+
+    def test_tuned_in_key(self):
+        assert ExecutionPlan(tuned=True).key() != ExecutionPlan().key()

@@ -22,6 +22,9 @@ import sys
 BASELINES = {
     "src/repro/algebra/": 90.0,
     "src/repro/api/": 80.0,
+    # the plan autotuner: profile/space/measure/model/store/tuner are
+    # all driven end-to-end by tests/test_autotune.py (measured ~93%)
+    "src/repro/autotune/": 85.0,
     "src/repro/core/": 85.0,
     "src/repro/graphs/": 90.0,
     "src/repro/kernels/frontier/": 85.0,
